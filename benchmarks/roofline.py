@@ -1,0 +1,146 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh) cell, derives the three roofline terms from the
+compiled HLO (cost analysis + SPMD-dump collective accounting, scan-corrected
+via depth probes — see launch/dryrun.py):
+
+  compute    = HLO_FLOPs_per_device / 197 TFLOP/s          (bf16 MXU peak)
+  memory     = HLO_bytes_per_device / 819 GB/s             (HBM)
+  collective = collective_bytes_per_device / 50 GB/s       (ICI link)
+
+plus MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*D (fwd-only), the
+useful-compute ratio, the dominant term, and the roofline fraction
+(useful-compute time / bottleneck-term time — the MFU analogue).
+
+Caveats recorded in EXPERIMENTS.md: XLA:CPU float-normalization inflates
+bf16 buffer traffic ~2x in `memory` (upper bound); `collective` uses the
+TPU-adjusted volume (grad all-reduces counted at reduce-scatter cost).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.roofline --dir artifacts/dryrun [--md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12     # bf16 per chip
+HBM_BW = 819e9          # bytes/s
+LINK_BW = 50e9          # bytes/s per ICI link
+
+
+def analyze_cell(art: dict) -> dict:
+    corr = art.get("corrected") or {}
+    flops = corr.get("flops", art["flops_per_device"])
+    bytes_acc = corr.get("bytes_accessed", art["bytes_accessed_per_device"])
+    coll = corr.get(
+        "collective_bytes_tpu",
+        corr.get("collective_bytes", art["collectives"]["total_bytes"]),
+    )
+    devices = art["devices"]
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_coll = coll / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    model_flops = art.get("model_flops", 0.0)
+    if art["kind"] == "prefill":
+        # prefill computes logits only at the last position: exclude the
+        # unembed matmul from the useful-FLOPs model
+        from repro.configs import get_config
+
+        cfg = get_config(art["arch"])
+        model_flops -= 2 * cfg.padded_vocab * cfg.d_model * art["tokens"]
+    useful_t = model_flops / devices / PEAK_FLOPS
+    bound_t = max(terms.values())
+    frac = useful_t / bound_t if bound_t > 0 else 0.0
+    ratio = model_flops / (flops * devices) if flops else 0.0
+    return {
+        "arch": art["arch"],
+        "shape": art["shape"],
+        "mesh": "2x16x16" if art["multi_pod"] else "16x16",
+        "kind": art["kind"],
+        "devices": devices,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_ratio": ratio,
+        "roofline_frac": frac,
+        "peak_mem_gib": art["memory"]["peak_est_bytes"] / 2**30,
+        "collective_counts": art["collectives"].get("counts", {}),
+    }
+
+
+ACTIONS = {
+    ("compute", True): "cut remat recompute (save attention outs / mlp acts selectively)",
+    ("compute", False): "reduce redundant per-device compute (replicated-head fallback, CE chunk recompute)",
+    ("memory", True): "larger fused blocks / fewer materialized intermediates (bf16 everywhere, fused kernels)",
+    ("memory", False): "keep weights resident (TP) and shrink cache reads (windowing, MLA latents)",
+    ("collective", True): "shrink FSDP gather volume: group layers per gather, or shift FSDP->TP for hot dims",
+    ("collective", False): "batch tiny decode collectives; widen TP only where cache sharding needs it",
+}
+
+
+def action_for(row: dict) -> str:
+    return ACTIONS[(row["dominant"], row["kind"] == "train")]
+
+
+def load_all(directory: str | Path) -> list[dict]:
+    rows = []
+    for p in sorted(Path(directory).glob("*.json")):
+        art = json.loads(p.read_text())
+        if "flops_per_device" not in art:
+            continue
+        rows.append(analyze_cell(art))
+    return rows
+
+
+def to_markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | 6ND/HLO | roofline |")
+    sep = "|" + "---|" * 9
+    out = [hdr, sep]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.3f} | {r['t_memory_s']:.3f} "
+            f"| {r['t_collective_s']:.3f} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_frac']:.2f} |"
+        )
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", type=str, default="artifacts/dryrun")
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--csv", type=str, default=None)
+    args = ap.parse_args()
+    rows = load_all(args.dir)
+    if args.md:
+        print(to_markdown(rows))
+    else:
+        print("arch,shape,mesh,t_compute,t_memory,t_collective,dominant,"
+              "useful_ratio,roofline_frac")
+        for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+            print(f"{r['arch']},{r['shape']},{r['mesh']},{r['t_compute_s']:.4f},"
+                  f"{r['t_memory_s']:.4f},{r['t_collective_s']:.4f},"
+                  f"{r['dominant']},{r['useful_ratio']:.3f},{r['roofline_frac']:.3f}")
+    if args.csv:
+        import csv
+
+        with open(args.csv, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+            w.writeheader()
+            for r in rows:
+                r = dict(r)
+                r["collective_counts"] = json.dumps(r["collective_counts"])
+                w.writerow(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""MegaScope end-to-end: token-by-token generation with live probes, a
+perturbation experiment, PCA token trajectories, and the HTML dashboard.
+
+    PYTHONPATH=src python examples/scope_generation.py --out artifacts/scope
+"""
+
+import argparse
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.scope import (
+    PerturbSpec,
+    ProbeSpec,
+    ScopeCollector,
+    generate_with_scope,
+    pca_fit,
+    pca_project,
+    write_dashboard,
+)
+from repro.models import get_model
+from repro.models import layers as L
+from repro.models import lm as lm_mod
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", type=str, default="artifacts/scope")
+    ap.add_argument("--steps", type=int, default=12)
+    args = ap.parse_args()
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    cfg = get_config("qwen2-0.5b", smoke=True)
+    params = get_model(cfg).init(cfg, jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 2, cfg.vocab_size)
+
+    print("== generation with probes ==")
+    scope = ScopeCollector(probes=[
+        ProbeSpec("final_hidden", "stats"),
+        ProbeSpec("attn_probs", "full"),      # decode path materializes probs
+        ProbeSpec("mlp_hidden", "stats"),
+    ])
+    records, toks = generate_with_scope(cfg, params, prompt, args.steps, scope)
+    for r in records[:5]:
+        print(f"step {r.step}: token={r.token} p={r.prob:.3f} "
+              f"top3={list(zip(r.topk_tokens[:3], [round(p,3) for p in r.topk_probs[:3]]))}")
+
+    # attention heatmap from the last decode step (layer 0, head 0)
+    attn = None
+    for key, val in records[-1].captures.items():
+        if key.startswith("attn_probs"):
+            a = np.asarray(val)           # [L, B, 1, K, G, T]
+            attn = a[0, 0, 0, 0, 0][None, :]  # 1 x T row for the last token
+            attn = np.repeat(attn, 8, axis=0)
+            break
+
+    print("\n== PCA trajectory of the residual stream ==")
+    hidden, _, _ = lm_mod.forward(cfg, params, {"tokens": prompt})
+    h = np.asarray(hidden[0], np.float32)    # [S, D]
+    fit = pca_fit(h, k=2)
+    pts = pca_project(h, fit)
+    print(f"explained variance: {[round(v, 3) for v in fit['explained']]}")
+
+    print("\n== perturbation experiment: Gaussian noise on attention output ==")
+    batch = {"tokens": prompt, "targets": jnp.roll(prompt, -1, axis=1)}
+    base, _ = lm_mod.loss_fn(cfg, params, batch)
+    rows = []
+    for sigma in (0.0, 0.05, 0.2, 0.8):
+        pert = ScopeCollector(perturbs=[PerturbSpec("att_resid", "gaussian", sigma)])
+        loss, _ = lm_mod.loss_fn(cfg, params, batch, pert)
+        rows.append((sigma, float(loss)))
+        print(f"sigma={sigma:<5} loss={float(loss):.4f} (delta={float(loss)-float(base):+.4f})")
+
+    dash = write_dashboard(
+        out / "dashboard.html", records,
+        attention=attn, pca_points=pts,
+        meta=f"{cfg.name}: {args.steps} decode steps; perturbation sweep {rows}",
+    )
+    print(f"\nwrote {dash}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""MegaScan end-to-end: simulate a 3-D-parallel cluster with a down-clocked
+GPU and a degraded link, align clocks, run the 3-stage detector, export a
+Chrome/Perfetto trace + diagnosis report.
+
+    PYTHONPATH=src python examples/trace_and_detect.py --out artifacts/megascan
+"""
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.simkit.engine import FaultModel
+from repro.core.simkit.workload import ModelProfile, Topology
+from repro.core.tracing import (
+    ClockModel,
+    align_clocks,
+    apply_alignment,
+    detect,
+    reconstruct_collectives,
+    simulate_trace,
+)
+from repro.core.tracing.chrome import save_chrome
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", type=str, default="artifacts/megascan")
+    ap.add_argument("--slow-rank", type=int, default=5)
+    ap.add_argument("--slow-factor", type=float, default=0.5)
+    args = ap.parse_args()
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    topo = Topology(dp=2, pp=2, tp=2)
+    faults = FaultModel(
+        compute_slowdown={args.slow_rank: args.slow_factor},
+        link_slowdown={(2, 6): 0.3, (6, 2): 0.3},
+        jitter=0.01,
+    )
+    clocks = ClockModel(offset_sigma=10e-3, drift_sigma=5e-5, seed=1)
+    events, truth = simulate_trace(
+        topo, ModelProfile(), n_micro=8, n_iters=3, faults=faults, clocks=clocks
+    )
+    print(f"simulated {len(events)} events on {topo.world} ranks "
+          f"(ground truth: slow rank {truth['slow_ranks']}, "
+          f"degraded links {truth['degraded_links']})")
+
+    # raw vs aligned anchor spread
+    raw_inst = reconstruct_collectives(events)
+    raw_spread = np.median([
+        max(i.ends.values()) - min(i.ends.values())
+        for i in raw_inst if len(i.members) > 1
+    ])
+    alignment = align_clocks(events)
+    aligned = apply_alignment(events, alignment)
+    ali_inst = reconstruct_collectives(aligned)
+    ali_spread = np.median([
+        max(i.ends.values()) - min(i.ends.values())
+        for i in ali_inst if len(i.members) > 1
+    ])
+    print(f"clock alignment: median collective end-spread "
+          f"{raw_spread*1e3:.3f} ms -> {ali_spread*1e6:.1f} us")
+
+    diag = detect(aligned, topo)
+    print("\n== diagnosis ==")
+    print(json.dumps(diag.summary(), indent=1))
+    ok = diag.slow_ranks == truth["slow_ranks"]
+    print("slow-rank detection:", "CORRECT" if ok else "MISMATCH")
+
+    save_chrome(aligned, out / "trace.json")
+    (out / "diagnosis.json").write_text(json.dumps(diag.summary(), indent=1))
+    print(f"\nwrote {out}/trace.json (chrome://tracing / Perfetto) and "
+          f"{out}/diagnosis.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""End-to-end LM training driver with checkpoint/restart.
+
+Presets scale from CPU-runnable to the deliverable-scale run:
+
+    PYTHONPATH=src python examples/train_lm.py                  # tiny, CPU
+    PYTHONPATH=src python examples/train_lm.py --preset 100m \
+        --steps 300                                             # accelerator
+
+The 100m preset is the "~100M parameters for a few hundred steps" end-to-end
+configuration; on the CPU container use the default tiny preset to see the
+same loop (data pipeline -> jit step -> async ckpt -> resume) behave.
+"""
+
+import argparse
+import logging
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig
+from repro.train.loop import LoopConfig, train
+from repro.train.optim import OptimizerConfig
+
+PRESETS = {
+    "tiny": dict(
+        model=ModelConfig(
+            name="tiny-lm", family="dense", num_layers=4, d_model=128,
+            num_heads=4, num_kv_heads=2, head_dim=32, d_ff=512,
+            vocab_size=2048, tie_embeddings=True, attn_kv_chunk=64,
+            logits_chunk=64,
+        ),
+        seq=128, batch=8, lr=3e-3,
+    ),
+    "100m": dict(
+        model=ModelConfig(
+            name="lm-100m", family="dense", num_layers=12, d_model=768,
+            num_heads=12, num_kv_heads=4, head_dim=64, d_ff=3072,
+            vocab_size=32768, tie_embeddings=True,
+        ),
+        seq=1024, batch=64, lr=6e-4,
+    ),
+}
+
+
+def main() -> None:
+    logging.basicConfig(level=logging.INFO, format="%(message)s")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=PRESETS, default="tiny")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--ckpt-dir", type=str, default=None)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    args = ap.parse_args()
+
+    p = PRESETS[args.preset]
+    cfg = p["model"]
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=p["seq"],
+                      global_batch=p["batch"])
+    ocfg = OptimizerConfig(
+        lr=p["lr"], warmup_steps=max(args.steps // 10, 5),
+        total_steps=args.steps, schedule="cosine",
+    )
+    loop = LoopConfig(
+        n_steps=args.steps, log_every=max(args.steps // 12, 1),
+        ckpt_dir=args.ckpt_dir, ckpt_every=max(args.steps // 4, 10),
+        grad_accum=args.grad_accum,
+    )
+    state, history = train(cfg, ocfg, data, loop)
+    print("\nstep  loss     ce       lr        wall_s")
+    for h in history:
+        print(f"{h['step']:>4}  {h['loss']:.4f}  {h.get('ce', 0):.4f}  "
+              f"{h.get('lr', 0):.2e}  {h['wall_s']:>6}")
+    assert history[-1]["loss"] < history[0]["loss"]
+    print("\nloss decreased — end-to-end pipeline OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from repro.checkpoint.checkpointer import (
+    Checkpointer,
+    latest_step,
+    restore,
+    save,
+)
+
+__all__ = ["Checkpointer", "save", "restore", "latest_step"]

@@ -1,0 +1,29 @@
+from repro.configs.base import (
+    SHAPES,
+    ArchEntry,
+    GriffinConfig,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    RWKVConfig,
+    ShapeConfig,
+    applicable_shapes,
+    get_config,
+    list_archs,
+    register,
+)
+
+__all__ = [
+    "SHAPES",
+    "ArchEntry",
+    "GriffinConfig",
+    "MLAConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "RWKVConfig",
+    "ShapeConfig",
+    "applicable_shapes",
+    "get_config",
+    "list_archs",
+    "register",
+]

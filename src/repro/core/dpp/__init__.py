@@ -1,0 +1,20 @@
+from repro.core.dpp.schedule import (
+    Step,
+    legalize,
+    sched_bfc,
+    sched_dfc,
+    sched_wave,
+    schedule_table,
+)
+from repro.core.dpp.planner import PlanResult, Planner
+
+__all__ = [
+    "Step",
+    "sched_dfc",
+    "sched_bfc",
+    "sched_wave",
+    "legalize",
+    "schedule_table",
+    "Planner",
+    "PlanResult",
+]

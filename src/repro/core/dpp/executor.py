@@ -1,0 +1,193 @@
+"""JAX pipeline executor driven by MegaDPP schedule tables.
+
+TPU-native realization of the paper's async-P2P runtime (DESIGN.md §2.2): the
+planner picks the traversal order ahead-of-time; this executor lowers it into
+a static sequence of per-stage compute + ring ``ppermute`` steps under
+``shard_map``.  The backward pipeline falls out of autodiff (transpose of
+ppermute is the reverse ppermute), with the forward traversal order — the
+paper's contribution — fully schedule-controlled.
+
+Interleaving layout: global block (c, s) = chunk c on stage s; value flow
+(c, s) -> (c, s+1), wrapping (c, S-1) -> (c+1, 0), so every transfer is the
+same +1 ring permute.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.dpp.schedule import Step
+
+
+@dataclass
+class TimeTable:
+    """Static dispatch tables [T, S]: what each stage runs/receives per step."""
+    run_m: jnp.ndarray
+    run_c: jnp.ndarray
+    run_act: jnp.ndarray
+    recv_m: jnp.ndarray
+    recv_c: jnp.ndarray     # destination chunk slot at the receiver
+    recv_act: jnp.ndarray
+    recv_fin: jnp.ndarray   # receipt is a final output (write to out buffer)
+    steps: int
+
+
+def build_time_table(
+    order: list[Step], n_stages: int, n_chunks: int, n_micro: int
+) -> TimeTable:
+    """Greedy legal placement of the desired visit order: at each step every
+    stage runs its highest-priority *ready* pending (m, c) — the static
+    analogue of "always pick the highest-priority ready input"."""
+    fwd = [(m, c) for kind, m, c in order if kind == "F"]
+    pending = {s: list(fwd) for s in range(n_stages)}
+    ready: dict[tuple[int, int, int], int] = {
+        (m, 0, 0): 0 for m in range(n_micro)
+    }
+    placed: list[list[tuple[int, int] | None]] = []
+    done = 0
+    total = n_stages * len(fwd)
+    t = 0
+    max_steps = total + n_stages * n_chunks * n_micro + 16
+    while done < total and t < max_steps:
+        row: list[tuple[int, int] | None] = []
+        for s in range(n_stages):
+            pick = None
+            for i, (m, c) in enumerate(pending[s]):
+                r = ready.get((m, c, s))
+                if r is not None and r <= t:
+                    pick = (i, m, c)
+                    break
+            if pick is None:
+                row.append(None)
+                continue
+            i, m, c = pick
+            pending[s].pop(i)
+            done += 1
+            row.append((m, c))
+            # successor becomes ready next step
+            if s < n_stages - 1:
+                ready[(m, c, s + 1)] = t + 1
+            elif c < n_chunks - 1:
+                ready[(m, c + 1, 0)] = t + 1
+        placed.append(row)
+        t += 1
+    if done < total:
+        raise RuntimeError("schedule could not be legalized (cyclic order)")
+
+    T = len(placed) + 1  # one extra step to flush the last permute
+    S = n_stages
+    run_m = jnp.zeros((T, S), jnp.int32)
+    run_c = jnp.zeros((T, S), jnp.int32)
+    run_act = jnp.zeros((T, S), bool)
+    recv_m = jnp.zeros((T, S), jnp.int32)
+    recv_c = jnp.zeros((T, S), jnp.int32)
+    recv_act = jnp.zeros((T, S), bool)
+    recv_fin = jnp.zeros((T, S), bool)
+    for t, row in enumerate(placed):
+        for s, entry in enumerate(row):
+            if entry is None:
+                continue
+            m, c = entry
+            run_m = run_m.at[t, s].set(m)
+            run_c = run_c.at[t, s].set(c)
+            run_act = run_act.at[t, s].set(True)
+            # the receiver sees this value at step t+1
+            dst = (s + 1) % S
+            if s < S - 1:
+                dc, fin = c, False
+            elif c < n_chunks - 1:
+                dc, fin = c + 1, False
+            else:
+                dc, fin = 0, True
+            recv_m = recv_m.at[t + 1, dst].set(m)
+            recv_c = recv_c.at[t + 1, dst].set(dc)
+            recv_act = recv_act.at[t + 1, dst].set(True)
+            recv_fin = recv_fin.at[t + 1, dst].set(fin)
+    return TimeTable(run_m, run_c, run_act, recv_m, recv_c, recv_act, recv_fin, T)
+
+
+def pipeline_apply(
+    params: jax.Array,                 # [S, C, ...] stage-major stacked blocks
+    x_micro: jax.Array,                # [n_micro, B, D] microbatch inputs
+    table: TimeTable,
+    *,
+    mesh: jax.sharding.Mesh,
+    axis: str = "stage",
+    block_fn: Callable[[jax.Array, jax.Array], jax.Array],
+) -> jax.Array:
+    """Runs the pipelined forward; returns [n_micro, B, D] final activations
+    (replicated).  Differentiable — backward pipelines automatically."""
+    S = mesh.shape[axis]
+    n_micro, B, D = x_micro.shape
+    C = params.shape[1]
+
+    def body(params_loc, x_loc):
+        # params_loc [1, C, ...] (this stage's chunks); x_loc replicated
+        params_loc = jax.tree.map(lambda a: a[0], params_loc)
+        sid = jax.lax.axis_index(axis)
+
+        inbox0 = jnp.zeros((n_micro, C, B, D), x_loc.dtype)
+        out0 = jnp.zeros((n_micro, B, D), x_loc.dtype)
+        recv0 = jnp.zeros((B, D), x_loc.dtype)
+
+        def step(carry, t):
+            inbox, out, recv = carry
+            # 1. deposit what arrived on the wire last step
+            r_act = table.recv_act[t, sid]
+            r_fin = table.recv_fin[t, sid]
+            r_m = table.recv_m[t, sid]
+            r_c = table.recv_c[t, sid]
+            dep = jnp.where(r_act & ~r_fin, recv, inbox[r_m, r_c])
+            inbox = inbox.at[r_m, r_c].set(dep)
+            fin = jnp.where(r_act & r_fin, recv, out[r_m])
+            out = out.at[r_m].set(fin)
+            # 2. run this stage's scheduled task
+            act = table.run_act[t, sid]
+            m = table.run_m[t, sid]
+            c = table.run_c[t, sid]
+            first = (c == 0) & (sid == 0)
+            x_in = jnp.where(first, x_loc[m], inbox[m, c])
+            p_c = jax.tree.map(lambda a: a[c], params_loc)
+            y = block_fn(p_c, x_in)
+            y = jnp.where(act, y, jnp.zeros_like(y))
+            # 3. ship downstream
+            recv_next = jax.lax.ppermute(
+                y, axis, perm=[(i, (i + 1) % S) for i in range(S)]
+            )
+            return (inbox, out, recv_next), None
+
+        (inbox, out, _), _ = jax.lax.scan(
+            step, (inbox0, out0, recv0), jnp.arange(table.steps)
+        )
+        # outputs accumulate on stage 0 only; replicate across stages
+        out = jnp.where(sid == 0, out, jnp.zeros_like(out))
+        return jax.lax.psum(out, axis)
+
+    from jax import shard_map
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis), P()),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return fn(params, x_micro)
+
+
+def reference_apply(params, x_micro, block_fn):
+    """Sequential oracle: every block in (chunk, stage) order."""
+    S, C = params.shape[0], params.shape[1]
+
+    def one(x):
+        for c in range(C):
+            for s in range(S):
+                x = block_fn(jax.tree.map(lambda a: a[s, c], params), x)
+        return x
+
+    return jax.vmap(one)(x_micro)

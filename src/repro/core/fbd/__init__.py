@@ -1,0 +1,25 @@
+from repro.core.fbd.coordinator import (
+    BitVectorCoordinator,
+    CollectiveRequest,
+    run_with_coordinator,
+    run_fcfs,
+)
+from repro.core.fbd.ranks import (
+    FBDPlacement,
+    VirtualPhysicalMap,
+    evaluate_placement,
+    plan_placement,
+)
+from repro.core.fbd.decouple import make_decoupled_step
+
+__all__ = [
+    "BitVectorCoordinator",
+    "CollectiveRequest",
+    "run_with_coordinator",
+    "run_fcfs",
+    "VirtualPhysicalMap",
+    "FBDPlacement",
+    "plan_placement",
+    "evaluate_placement",
+    "make_decoupled_step",
+]

@@ -1,0 +1,70 @@
+"""Decoupled forward/backward execution in JAX (MegaFBD §4.1-4.2).
+
+PyTorch binds F and B to the same device by autograd construction; MegaFBD
+splits them into separate instances with *different* parallel configurations.
+JAX-native realization: ``jax.vjp`` + ``jax.closure_convert`` split one loss
+into two pure, separately-jittable functions —
+
+    fwd_fn(params, batch)            -> (loss, residuals)   [forward profile]
+    bwd_fn(residuals, cotangent)     -> grads               [backward profile]
+
+Each is compiled with its own mesh/sharding profile (e.g. forward on a weaker
+half of the cluster or with a smaller TP degree, backward on the full mesh).
+The residual transfer between the two placements is the explicit data
+synchronization MegaFBD's coordinator manages; its byte volume is returned so
+benchmarks can account it.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import axis_rules
+
+
+@dataclass
+class DecoupledStep:
+    fwd: Callable          # (params, batch) -> (loss, residuals)
+    bwd: Callable          # (residuals, cotangent) -> grads
+    residual_bytes: Callable  # (params, batch) -> int  (transfer volume)
+
+
+def make_decoupled_step(
+    loss_fn: Callable,                 # (params, batch) -> scalar loss
+    *,
+    fwd_mesh=None,
+    fwd_rules=None,
+    bwd_mesh=None,
+    bwd_rules=None,
+) -> DecoupledStep:
+    def fwd(params, batch):
+        with axis_rules(fwd_mesh, fwd_rules):
+            loss, vjp = jax.vjp(lambda p: loss_fn(p, batch), params)
+        vjp_pure, residuals = jax.closure_convert(vjp, jnp.ones_like(loss))
+        return loss, residuals
+
+    def bwd(params, batch, residuals, ct):
+        # rebuild the pure transpose with the backward profile installed
+        with axis_rules(bwd_mesh, bwd_rules):
+            _, vjp = jax.vjp(lambda p: loss_fn(p, batch), params)
+            vjp_pure, _ = jax.closure_convert(vjp, jnp.ones_like(ct))
+        (grads,) = vjp_pure(ct, *residuals)
+        return grads
+
+    def residual_bytes(params, batch) -> int:
+        _, res = jax.eval_shape(fwd, params, batch)
+        return int(sum(r.size * r.dtype.itemsize for r in res))
+
+    return DecoupledStep(fwd=fwd, bwd=bwd, residual_bytes=residual_bytes)
+
+
+def decoupled_grad(step: DecoupledStep, params: Any, batch: Any):
+    """Convenience: run fwd then bwd (possibly on different meshes) and
+    return (loss, grads).  Matches jax.grad up to numerics."""
+    loss, residuals = step.fwd(params, batch)
+    grads = step.bwd(params, batch, residuals, jnp.ones_like(loss))
+    return loss, grads

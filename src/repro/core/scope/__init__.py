@@ -1,0 +1,18 @@
+from repro.core.scope.collector import PerturbSpec, ProbeSpec, ScopeCollector
+from repro.core.scope.compress import COMPRESSORS, stats_of
+from repro.core.scope.pca import pca_fit, pca_project
+from repro.core.scope.generation import GenerationRecord, generate_with_scope
+from repro.core.scope.dashboard import write_dashboard
+
+__all__ = [
+    "ProbeSpec",
+    "PerturbSpec",
+    "ScopeCollector",
+    "COMPRESSORS",
+    "stats_of",
+    "pca_fit",
+    "pca_project",
+    "GenerationRecord",
+    "generate_with_scope",
+    "write_dashboard",
+]

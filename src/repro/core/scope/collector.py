@@ -1,0 +1,128 @@
+"""MegaScope probe collector + perturbation injection (§6.1-6.2).
+
+Probes are registered declaratively (observation points = tag-name patterns +
+compression mode); the collector is threaded through the model as a
+``repro.models.hooks.Collector`` and captures compressed representations that
+flow out of layer scans via the forward's aux outputs.
+
+Layer selection is post-hoc: inside ``lax.scan`` the layer index is traced, so
+all layers capture (uniform ys) and the stacked [L, ...] output is sliced by
+the viewer — compression keeps that cheap.
+
+Perturbations implement the paper's controlled experiments:
+  * ``gaussian``  — additive noise (reduced-precision emulation)
+  * ``bitflip``   — random mantissa/exponent bit flips (storage-fault studies)
+  * ``offset``    — constant shift on inter-layer tensors (cross-device
+                    quantization error / persistent link-jitter emulation)
+  * ``zero_mask`` — channel masking
+  * ``attn_uniform`` — replace attention probabilities with uniform weights
+Layer targeting uses traced-safe ``jnp.where`` on the scan layer index.
+"""
+
+from __future__ import annotations
+
+import fnmatch
+import re
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scope.compress import COMPRESSORS
+from repro.models.hooks import Collector
+
+
+@dataclass(frozen=True)
+class ProbeSpec:
+    pattern: str                  # fnmatch over tag names ("attn_*", "mlp_hidden")
+    compress: str = "stats"       # COMPRESSORS key
+    kwargs: tuple = ()            # extra args for the compressor
+
+
+@dataclass(frozen=True)
+class PerturbSpec:
+    pattern: str
+    kind: str                     # gaussian | bitflip | offset | zero_mask | attn_uniform
+    amount: float = 0.0           # sigma / flip prob / offset / mask frac
+    layer: int | None = None      # None = all layers
+
+
+class ScopeCollector(Collector):
+    def __init__(
+        self,
+        probes: list[ProbeSpec] = (),
+        perturbs: list[PerturbSpec] = (),
+        rng: jax.Array | None = None,
+    ):
+        self.probes = list(probes)
+        self.perturbs = list(perturbs)
+        self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self._buf: dict[str, Any] = {}
+        self._counter = 0
+
+    # ------------------------------------------------------------- capture
+    def tag(self, name: str, value: jax.Array, **meta: Any) -> jax.Array:
+        layer = meta.get("layer")
+        for spec in self.perturbs:
+            if fnmatch.fnmatch(name, spec.pattern):
+                value = self._apply_perturb(spec, value, layer)
+        for spec in self.probes:
+            if fnmatch.fnmatch(name, spec.pattern):
+                fn = COMPRESSORS[spec.compress]
+                self._buf[f"{name}.{spec.compress}"] = fn(value, *spec.kwargs)
+        return value
+
+    def drain(self) -> dict[str, Any]:
+        out, self._buf = self._buf, {}
+        return out
+
+    # ----------------------------------------------------------- perturbs
+    def _key(self) -> jax.Array:
+        self._counter += 1
+        return jax.random.fold_in(self.rng, self._counter)
+
+    def _apply_perturb(
+        self, spec: PerturbSpec, value: jax.Array, layer
+    ) -> jax.Array:
+        out = self._perturb_value(spec, value)
+        if spec.layer is None or layer is None:
+            return out
+        sel = jnp.asarray(layer) == spec.layer
+        return jnp.where(sel, out, value)
+
+    def _perturb_value(self, spec: PerturbSpec, value: jax.Array) -> jax.Array:
+        kind, amt = spec.kind, spec.amount
+        if kind == "gaussian":
+            return value + amt * jax.random.normal(
+                self._key(), value.shape, jnp.float32
+            ).astype(value.dtype)
+        if kind == "offset":
+            return value + jnp.asarray(amt, value.dtype)
+        if kind == "zero_mask":
+            keep = jax.random.bernoulli(self._key(), 1.0 - amt, value.shape[-1:])
+            return value * keep.astype(value.dtype)
+        if kind == "bitflip":
+            return _bitflip(value, amt, self._key())
+        if kind == "attn_uniform":
+            # value: attention probabilities [..., T]; mix toward uniform
+            u = jnp.ones_like(value) / value.shape[-1]
+            return (1.0 - amt) * value + amt * u
+        raise ValueError(kind)
+
+
+def _bitflip(value: jax.Array, prob: float, key: jax.Array) -> jax.Array:
+    """Flip each bit of the binary representation with probability ``prob``
+    (the paper's storage-fault robustness study)."""
+    dt = value.dtype
+    if dt == jnp.float32:
+        idt, nbits = jnp.uint32, 32
+    elif dt in (jnp.bfloat16, jnp.float16):
+        idt, nbits = jnp.uint16, 16
+    else:
+        return value
+    bits = jax.lax.bitcast_convert_type(value, idt)
+    flips = jax.random.bernoulli(key, prob, value.shape + (nbits,))
+    weights = (2 ** jnp.arange(nbits, dtype=jnp.uint32)).astype(idt)
+    mask = (flips.astype(idt) * weights).sum(-1).astype(idt)
+    return jax.lax.bitcast_convert_type(bits ^ mask, dt)

@@ -1,0 +1,59 @@
+"""Hierarchical on-line compression of captured tensors (MegaScope §6.1).
+
+Compression happens *in-graph* on device — the TPU-native version of the
+paper's host-side aggregation: only the compressed representation travels to
+the host, so capture bandwidth is bounded regardless of model size.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def stats_of(x: jax.Array) -> dict[str, jax.Array]:
+    xf = x.astype(jnp.float32)
+    return {
+        "mean": xf.mean(),
+        "std": xf.std(),
+        "min": xf.min(),
+        "max": xf.max(),
+        "l2": jnp.sqrt(jnp.sum(xf * xf)),
+        "sparsity": (jnp.abs(xf) < 1e-6).mean(),
+    }
+
+
+def histogram(x: jax.Array, bins: int = 32, lo: float = -8.0, hi: float = 8.0):
+    xf = x.astype(jnp.float32).reshape(-1)
+    edges = jnp.linspace(lo, hi, bins + 1)
+    idx = jnp.clip(jnp.searchsorted(edges, xf) - 1, 0, bins - 1)
+    counts = jnp.zeros((bins,), jnp.int32).at[idx].add(1)
+    return {"hist": counts, "edges": edges}
+
+
+def subsample(x: jax.Array, k: int = 64) -> jax.Array:
+    """Strided slice of the trailing dim (cheap deterministic sketch)."""
+    flat = x.reshape(-1, x.shape[-1])
+    r_stride = max(flat.shape[0] // k, 1)
+    c_stride = max(x.shape[-1] // k, 1)
+    return flat[::r_stride][:k, ::c_stride][:, :k]
+
+
+def channel_profile(x: jax.Array) -> dict[str, jax.Array]:
+    """Per-channel mean/max over all other dims (distribution-drift view)."""
+    xf = x.astype(jnp.float32)
+    red = tuple(range(xf.ndim - 1))
+    return {"ch_mean": xf.mean(red), "ch_absmax": jnp.abs(xf).max(red)}
+
+
+def full(x: jax.Array) -> jax.Array:
+    return x
+
+
+COMPRESSORS = {
+    "stats": stats_of,
+    "hist": histogram,
+    "sample": subsample,
+    "channels": channel_profile,
+    "full": full,
+}

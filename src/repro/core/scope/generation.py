@@ -1,0 +1,64 @@
+"""Token-by-token generation with synchronized introspection (MegaScope §6.2,
+Fig. 4): each decode step records the chosen token, its probability, the
+top-k decision distribution, and all registered probe captures."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.scope.collector import ScopeCollector
+from repro.models import get_model
+
+
+@dataclass
+class GenerationRecord:
+    step: int
+    token: int
+    prob: float
+    topk_tokens: list[int]
+    topk_probs: list[float]
+    captures: dict[str, Any] = field(default_factory=dict)
+
+
+def generate_with_scope(
+    cfg: ModelConfig,
+    params,
+    prompt_tokens: jax.Array,     # [B, S] (B=1 recommended for viz)
+    n_steps: int,
+    scope: ScopeCollector | None = None,
+    top_k: int = 8,
+) -> tuple[list[GenerationRecord], jax.Array]:
+    model = get_model(cfg)
+    B, S = prompt_tokens.shape
+    cache = model.init_cache(cfg, B, S + n_steps)
+    scope = scope or ScopeCollector()
+
+    cache, logits = model.prefill(
+        cfg, params, {"tokens": prompt_tokens}, cache, scope
+    )
+    records: list[GenerationRecord] = []
+    toks = []
+    tok = jnp.argmax(logits, -1)
+    for i in range(n_steps):
+        probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+        tk_p, tk_i = jax.lax.top_k(probs[0], top_k)
+        captures = jax.tree.map(np.asarray, scope.drain())
+        records.append(GenerationRecord(
+            step=i,
+            token=int(tok[0]),
+            prob=float(probs[0, tok[0]]),
+            topk_tokens=[int(t) for t in tk_i],
+            topk_probs=[float(p) for p in tk_p],
+            captures=captures,
+        ))
+        toks.append(tok)
+        cache, logits = model.decode_step(
+            cfg, params, cache, tok, jnp.int32(S + i), scope
+        )
+    return records, jnp.stack(toks, axis=1)

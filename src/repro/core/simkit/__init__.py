@@ -1,0 +1,25 @@
+from repro.core.simkit.engine import (
+    DeadlockError,
+    Engine,
+    EngineResult,
+    FaultModel,
+    Task,
+    TaskRecord,
+)
+from repro.core.simkit.workload import (
+    ModelProfile,
+    Topology,
+    build_training_step,
+)
+
+__all__ = [
+    "DeadlockError",
+    "Engine",
+    "EngineResult",
+    "FaultModel",
+    "Task",
+    "TaskRecord",
+    "ModelProfile",
+    "Topology",
+    "build_training_step",
+]

@@ -1,0 +1,28 @@
+from repro.core.tracing.events import TraceEvent
+from repro.core.tracing.tracer import AsyncTraceWriter, Tracer, gather_traces
+from repro.core.tracing.chrome import from_chrome, to_chrome
+from repro.core.tracing.align import (
+    CollectiveInstance,
+    align_clocks,
+    apply_alignment,
+    reconstruct_collectives,
+)
+from repro.core.tracing.detect import Diagnosis, detect
+from repro.core.tracing.simulate import ClockModel, simulate_trace
+
+__all__ = [
+    "TraceEvent",
+    "Tracer",
+    "AsyncTraceWriter",
+    "gather_traces",
+    "to_chrome",
+    "from_chrome",
+    "CollectiveInstance",
+    "reconstruct_collectives",
+    "align_clocks",
+    "apply_alignment",
+    "Diagnosis",
+    "detect",
+    "ClockModel",
+    "simulate_trace",
+]

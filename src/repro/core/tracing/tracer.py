@@ -1,0 +1,102 @@
+"""Runtime tracer (MegaScan's ``tracers.scope``) + async rank-0 gathering.
+
+On a GPU cluster the paper brackets operations with CUDA events; here the
+host monotonic clock brackets dispatch of jit-compiled blocks (our CPU test
+runs call ``jax.block_until_ready`` inside the scope for faithful durations).
+Persistence runs on a background thread so tracing never stalls the training
+loop (§3.2 "Log pre-processing").
+"""
+
+from __future__ import annotations
+
+import json
+import queue
+import threading
+import time
+from contextlib import contextmanager
+from pathlib import Path
+from typing import Any, Callable, Iterable
+
+from repro.core.tracing.events import TraceEvent
+
+
+class Tracer:
+    def __init__(
+        self,
+        rank: int,
+        enabled: bool = True,
+        clock: Callable[[], float] = time.perf_counter,
+    ):
+        self.rank = rank
+        self.enabled = enabled
+        self.clock = clock
+        self.events: list[TraceEvent] = []
+
+    @contextmanager
+    def scope(self, name: str, kind: str = "compute", **args: Any):
+        if not self.enabled:
+            yield self
+            return
+        t0 = self.clock()
+        try:
+            yield self
+        finally:
+            t1 = self.clock()
+            self.events.append(
+                TraceEvent(name, self.rank, t0, t1 - t0, kind, dict(args))
+            )
+
+    def record(self, name: str, ts: float, dur: float, kind: str = "compute",
+               **args: Any) -> None:
+        if self.enabled:
+            self.events.append(TraceEvent(name, self.rank, ts, dur, kind, dict(args)))
+
+    def instant(self, name: str, **args: Any) -> None:
+        self.record(name, self.clock(), 0.0, "marker", **args)
+
+    def clear(self) -> None:
+        self.events = []
+
+
+def gather_traces(tracers: Iterable[Tracer]) -> list[TraceEvent]:
+    """Rank-0 gather: merge per-rank buffers, time-ordered."""
+    out: list[TraceEvent] = []
+    for t in tracers:
+        out.extend(t.events)
+    out.sort(key=lambda e: (e.ts, e.rank))
+    return out
+
+
+class AsyncTraceWriter:
+    """Background JSONL persistence (keeps the training path stall-free)."""
+
+    def __init__(self, path: str | Path):
+        self.path = Path(path)
+        self._q: queue.Queue = queue.Queue()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self) -> None:
+        with open(self.path, "a") as f:
+            while True:
+                item = self._q.get()
+                if item is None:
+                    break
+                f.write(json.dumps(item.to_json()) + "\n")
+
+    def submit(self, events: Iterable[TraceEvent]) -> None:
+        for e in events:
+            self._q.put(e)
+
+    def close(self) -> None:
+        self._q.put(None)
+        self._thread.join()
+
+
+def load_jsonl(path: str | Path) -> list[TraceEvent]:
+    out = []
+    with open(path) as f:
+        for line in f:
+            if line.strip():
+                out.append(TraceEvent.from_json(json.loads(line)))
+    return out

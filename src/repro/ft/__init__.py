@@ -1,0 +1,5 @@
+from repro.ft.mitigation import MitigationAction, MitigationPolicy
+from repro.ft.failover import TrainSupervisor
+from repro.ft.compress import GradCompressor
+
+__all__ = ["MitigationAction", "MitigationPolicy", "TrainSupervisor", "GradCompressor"]

@@ -1,0 +1,59 @@
+"""Checkpoint/restart supervisor with elastic recovery.
+
+Runs the user's step function; on failure restores the latest checkpoint and
+resumes (optionally on a reconfigured mesh — elastic scale-down after node
+exclusion).  Data-pipeline determinism (step-indexed batches) makes resumed
+runs bitwise-reproducible modulo excluded hardware.
+"""
+
+from __future__ import annotations
+
+import logging
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from repro.checkpoint.checkpointer import Checkpointer, latest_step, restore
+
+log = logging.getLogger("repro.ft")
+
+
+@dataclass
+class TrainSupervisor:
+    step_fn: Callable[[Any, dict], tuple[Any, dict]]
+    make_batch: Callable[[int], dict]
+    ckpt_dir: str
+    ckpt_every: int = 50
+    max_restarts: int = 3
+    on_restore: Callable[[Any, int], Any] | None = None  # resharding hook
+    history: list[dict] = field(default_factory=list)
+
+    def run(self, state: Any, n_steps: int, start_step: int = 0) -> tuple[Any, int]:
+        ckpt = Checkpointer(self.ckpt_dir)
+        step = start_step
+        restarts = 0
+        while step < n_steps:
+            try:
+                batch = self.make_batch(step)
+                state, metrics = self.step_fn(state, batch)
+                self.history.append({"step": step, **{
+                    k: float(v) for k, v in metrics.items()
+                    if hasattr(v, "ndim") and v.ndim == 0
+                }})
+                step += 1
+                if step % self.ckpt_every == 0 or step == n_steps:
+                    ckpt.save_async(state, step)
+            except Exception as e:  # noqa: BLE001 (injected device failures)
+                restarts += 1
+                log.warning("step %d failed (%s); restart %d", step, e, restarts)
+                if restarts > self.max_restarts:
+                    raise
+                ckpt.wait()
+                last = latest_step(self.ckpt_dir)
+                if last is None:
+                    raise
+                state, _ = restore(self.ckpt_dir, state)
+                step = last
+                if self.on_restore is not None:
+                    state = self.on_restore(state, step)
+        ckpt.wait()
+        return state, step

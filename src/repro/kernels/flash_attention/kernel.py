@@ -1,0 +1,145 @@
+"""Flash attention Pallas TPU kernel (tiled online softmax).
+
+Layout: q [BH, S, D] (one grid row per (batch, query-head)); k/v stay in
+KV-head layout [BK, T, D] and the BlockSpec index map performs the GQA
+head->kv-head arithmetic (no KV expansion in HBM).
+
+Grid (bh, i, j) with the KV dim j innermost/sequential; the running max /
+denominator / unnormalized accumulator live in revisited output blocks whose
+index maps ignore j, i.e. VMEM-resident across the KV sweep (the standard TPU
+flash pattern).  The final j step normalizes in place.
+
+Blocks are MXU-aligned: block_q x D and block_k x D tiles with D the full head
+dim (64-256), block_q = block_k = 128 by default.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+    *, scale: float, causal: bool, window: int | None,
+    block_q: int, block_k: int, t_real: int, s_real: int,
+):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[0].astype(jnp.float32)           # [bq, D]
+    k = k_ref[0].astype(jnp.float32)           # [bk, D]
+    v = v_ref[0].astype(jnp.float32)           # [bk, Dv]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                   # [bq, bk]
+
+    row = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    col = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = col < t_real
+    if causal:
+        mask &= col <= row
+    if window is not None:
+        mask &= col > row - window
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_ref[0]                           # [bq]
+    l_prev = l_ref[0]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    l_new = l_prev * corr + p.sum(axis=1)
+    acc = o_ref[0].astype(jnp.float32) * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[0] = m_new
+    l_ref[0] = l_new
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+    @pl.when(j == nk - 1)
+    def _normalize():
+        l = l_ref[0]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (o_ref[0].astype(jnp.float32) / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "scale", "causal", "window", "block_q", "block_k", "q_per_kv", "interpret",
+    ),
+)
+def flash_attention_pallas(
+    q: jax.Array,   # [BH, S, D]   (B*H query-head rows)
+    k: jax.Array,   # [BK, T, D]   (B*K kv-head rows)
+    v: jax.Array,   # [BK, T, Dv]
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int | None = None,
+    q_per_kv: int = 1,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, S, D = q.shape
+    BK, T, Dv = v.shape
+    s_pad = (-S) % block_q
+    t_pad = (-T) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, s_pad), (0, 0))) if s_pad else q
+    kp = jnp.pad(k, ((0, 0), (0, t_pad), (0, 0))) if t_pad else k
+    vp = jnp.pad(v, ((0, 0), (0, t_pad), (0, 0))) if t_pad else v
+    Sp, Tp = S + s_pad, T + t_pad
+    nq, nk = Sp // block_q, Tp // block_k
+    G = q_per_kv
+    # GQA head arithmetic: q rows are [b, h] row-major with h in [0, K*G);
+    # the kv row is b*K + h//G, which equals bh // G exactly.
+    assert BH == BK * G, (BH, BK, G)
+
+    def q_map(b, i, j):
+        return (b, i, 0)
+
+    def kv_index(b, i, j):
+        return (b // G, j, 0)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale, causal=causal, window=window,
+            block_q=block_q, block_k=block_k, t_real=T, s_real=S,
+        ),
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), q_map),
+            pl.BlockSpec((1, block_k, D), kv_index),
+            pl.BlockSpec((1, block_k, Dv), kv_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, Dv), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_q), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, block_q), lambda b, i, j: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, Sp, Dv), q.dtype),
+            jax.ShapeDtypeStruct((BH, Sp), jnp.float32),
+            jax.ShapeDtypeStruct((BH, Sp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    o = out[0]
+    if s_pad:
+        o = o[:, :S]
+    return o

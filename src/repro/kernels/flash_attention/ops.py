@@ -1,0 +1,41 @@
+"""jit'd dispatching wrapper: model layout [B,S,H,D] <-> kernel layout."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def flash_attention(
+    q: jax.Array,   # [B, S, H, D]
+    k: jax.Array,   # [B, T, K, D]
+    v: jax.Array,   # [B, T, K, Dv]
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    impl: str = "auto",
+) -> jax.Array:
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "xla":
+        return attention_ref(q, k, v, scale=scale, causal=causal, window=window)
+
+    B, S, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // K
+    qh = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * K, T, D)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * K, T, Dv)
+    o = flash_attention_pallas(
+        qh, kh, vh, scale=scale, causal=causal, window=window,
+        q_per_kv=G, block_q=block_q, block_k=block_k,
+        interpret=(impl == "pallas_interpret"),
+    )
+    return o.reshape(B, H, S, Dv).transpose(0, 2, 1, 3)

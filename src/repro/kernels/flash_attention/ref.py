@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,  # [B, S, H, D]
+    k: jax.Array,  # [B, T, K, D]
+    v: jax.Array,  # [B, T, K, Dv]
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int | None = None,
+) -> jax.Array:
+    B, S, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, D)
+    s = jnp.einsum("bskgd,btkd->bskgt", qg.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    row = jnp.arange(S)[:, None]
+    col = jnp.arange(T)[None, :]
+    m = jnp.ones((S, T), bool)
+    if causal:
+        m &= col <= row
+    if window is not None:
+        m &= col > row - window
+    s = jnp.where(m[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    fully_masked = ~m.any(-1)
+    p = jnp.where(fully_masked[None, :, None, None, None], 0.0, p)
+    o = jnp.einsum("bskgt,btkd->bskgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, v.shape[-1]).astype(q.dtype)

@@ -1,0 +1,80 @@
+"""RG-LRU Pallas TPU kernel: gated diagonal linear recurrence.
+
+h_t = a_t * h_{t-1} + b_t, elementwise over the width dim.  Grid
+(batch, width-blocks, chunks) with the chunk dim innermost; the [Wb] state
+lives in a revisited output block.  Within a chunk the recurrence is exact:
+cumulative decay products (linear space — a in (0,1), underflow is graceful)
+plus a decay-weighted prefix sum, all VPU elementwise/cumsum ops on
+[C, Wb] VMEM tiles.
+
+    h_i = A_i * h_in + A_i * sum_{s<=i} b_s / A_s,   A_i = prod_{j<=i} a_j
+
+For stability the division is computed as exp(log-space difference) with the
+same clamp scheme as the WKV6 kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CLAMP = 2.0
+
+
+def _rglru_kernel(a_ref, b_ref, y_ref, s_ref):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    a = a_ref[0].astype(jnp.float32)   # [C, Wb]
+    b = b_ref[0].astype(jnp.float32)
+    h_in = s_ref[0].astype(jnp.float32)  # [Wb]
+
+    la = jnp.clip(jnp.log(jnp.maximum(a, 1e-37)), -CLAMP, 0.0)
+    cum = jnp.cumsum(la, axis=0)       # [C, Wb] inclusive log decay
+    A = jnp.exp(cum)
+    # prefix = sum_{s<=i} exp(cum_i - cum_s) * b_s  computed stably:
+    z = b * jnp.exp(-cum)
+    h = A * (h_in[None, :] + jnp.cumsum(z, axis=0))
+    y_ref[0] = h.astype(y_ref.dtype)
+    s_ref[0] = h[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rglru_pallas(
+    a: jax.Array,  # [B, T, W]
+    b: jax.Array,
+    chunk: int = 32,
+    interpret: bool = False,
+    block_w: int = 512,
+) -> tuple[jax.Array, jax.Array]:
+    B, T, W = a.shape
+    assert T % chunk == 0, (T, chunk)
+    wb = min(block_w, W)
+    assert W % wb == 0, (W, wb)
+    nc = T // chunk
+    nw = W // wb
+
+    y, s = pl.pallas_call(
+        _rglru_kernel,
+        grid=(B, nw, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, wb), lambda bi, wi, j: (bi, j, wi)),
+            pl.BlockSpec((1, chunk, wb), lambda bi, wi, j: (bi, j, wi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, wb), lambda bi, wi, j: (bi, j, wi)),
+            pl.BlockSpec((1, wb), lambda bi, wi, j: (bi, wi)),  # revisited state
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, W), a.dtype),
+            jax.ShapeDtypeStruct((B, W), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, b)
+    return y, s

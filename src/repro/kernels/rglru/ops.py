@@ -1,0 +1,26 @@
+"""Dispatching wrapper for the RG-LRU scan kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rglru.kernel import rglru_pallas
+from repro.kernels.rglru.ref import rglru_ref
+
+
+def rglru_scan(a, b, h0=None, *, chunk: int = 32, impl: str = "auto"):
+    """h_t = a_t * h_{t-1} + b_t; returns (h [B,T,W], h_last [B,W]).
+
+    impls: "xla" = two-level associative scan (scan_utils, GSPMD-friendly);
+    "ref" = sequential oracle; "pallas"/"pallas_interpret" = TPU kernel."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "xla":
+        from repro.models.scan_utils import lru_scan
+
+        return lru_scan(a, b, h0)
+    if impl == "ref":
+        return rglru_ref(a, b, h0)
+    if h0 is not None:
+        raise NotImplementedError("pallas rglru path starts from zero state")
+    return rglru_pallas(a, b, chunk=chunk, interpret=(impl == "pallas_interpret"))

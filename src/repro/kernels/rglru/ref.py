@@ -1,0 +1,25 @@
+"""Exact sequential oracle for the RG-LRU diagonal recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_ref(
+    a: jax.Array,  # [B, T, W] decay in (0, 1)
+    b: jax.Array,  # [B, T, W] input
+    h0: jax.Array | None = None,  # [B, W]
+) -> tuple[jax.Array, jax.Array]:
+    B, T, W = a.shape
+    h = h0.astype(jnp.float32) if h0 is not None else jnp.zeros((B, W), jnp.float32)
+
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    xs = (jnp.moveaxis(a, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(b, 1, 0).astype(jnp.float32))
+    h_fin, ys = jax.lax.scan(step, h, xs)
+    return jnp.moveaxis(ys, 0, 1), h_fin

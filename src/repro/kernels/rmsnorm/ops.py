@@ -1,0 +1,19 @@
+"""Dispatching wrapper: pallas on TPU, interpret-mode pallas or the jnp
+reference elsewhere."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+def rmsnorm(x, scale, eps: float = 1e-6, impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "pallas":
+        return rmsnorm_pallas(x, scale, eps)
+    if impl == "pallas_interpret":
+        return rmsnorm_pallas(x, scale, eps, interpret=True)
+    return rmsnorm_ref(x, scale, eps)

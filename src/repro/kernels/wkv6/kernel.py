@@ -1,0 +1,113 @@
+"""WKV6 (RWKV-6 "Finch") Pallas TPU kernel.
+
+TPU adaptation of the per-token CUDA recurrence (DESIGN.md §5): the sequence
+is processed in VMEM chunks of C tokens; within a chunk the pairwise
+contributions are *matmul form* (C x C score and C x V output products on the
+MXU); across chunks only the [K, V] matrix state is carried, living in a
+revisited output block that doubles as the final-state output.
+
+Numerics: the intra-chunk pair term uses exact per-channel decay differences
+(exponents are always <= 0, so extreme decay only underflows to zero) — this
+kernel is bit-faithful to the sequential oracle, unlike the XLA batch path
+(scan_utils.wkv6_chunked), whose matmul form requires a documented log-decay
+clamp.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CLAMP = 2.0
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_ref, *, chunk: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)          # [C, K]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)          # [C, V]
+    w = w_ref[0].astype(jnp.float32)          # [C, K]
+    u = u_ref[0].astype(jnp.float32)          # [K]
+    s_in = s_ref[0].astype(jnp.float32)       # [K, V]
+
+    lw = jnp.minimum(jnp.log(jnp.maximum(w, 1e-37)), -1e-6)
+    cum = jnp.cumsum(lw, axis=0)              # inclusive  [C, K]
+    cum_prev = cum - lw
+
+    # intra-chunk pair scores, exact per-channel decay: the exponent
+    # cum_prev[i] - cum[s] is <= 0 for s < i, so only graceful underflow —
+    # the [C, C, K] tile lives entirely in VMEM (no clamp needed here,
+    # unlike the XLA batch path)
+    diff = cum_prev[:, None, :] - cum[None, :, :]     # [C, C, K]
+    pair = jnp.sum(
+        r[:, None, :] * k[None, :, :] * jnp.exp(jnp.minimum(diff, 0.0)),
+        axis=-1,
+    )                                                  # [C, C]
+    ri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    ci = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    scores = jnp.where(ci < ri, pair, 0.0)    # strictly lower triangular
+    diag = jnp.sum(r * u[None, :] * k, axis=1)  # bonus term  [C]
+    qp = r * jnp.exp(cum_prev)                # decayed queries (exp <= 1)
+
+    y = jax.lax.dot_general(
+        scores, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    y = y + diag[:, None] * v
+    y = y + jax.lax.dot_general(
+        qp, s_in, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state update: S' = diag(prod w) S + sum_s decay(s->end) k_s v_s^T
+    a_tot = jnp.exp(cum[-1])                   # [K]
+    k_dec = k * jnp.exp(cum[-1][None, :] - cum)
+    s_new = a_tot[:, None] * s_in + jax.lax.dot_general(
+        k_dec, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    s_ref[0] = s_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_pallas(
+    r: jax.Array,  # [BH, T, K]
+    k: jax.Array,
+    v: jax.Array,  # [BH, T, V]
+    w: jax.Array,  # [BH, T, K]
+    u: jax.Array,  # [BH, K]
+    chunk: int = 32,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    BH, T, K = r.shape
+    V = v.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+
+    y, s = pl.pallas_call(
+        functools.partial(_wkv6_kernel, chunk=chunk),
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, K), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, chunk, K), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, chunk, V), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, chunk, K), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, K), lambda b, j: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, V), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, K, V), lambda b, j: (b, 0, 0)),  # revisited state
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, T, V), r.dtype),
+            jax.ShapeDtypeStruct((BH, K, V), jnp.float32),
+        ],
+        interpret=interpret,
+    )(r, k, v, w, u)
+    return y, s

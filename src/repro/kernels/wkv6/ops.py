@@ -1,0 +1,49 @@
+"""Dispatching wrapper for the WKV6 kernel ([B,T,H,*] model layout)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv6.kernel import wkv6_pallas
+from repro.kernels.wkv6.ref import wkv6_ref
+
+
+def wkv6(
+    r: jax.Array,  # [B, T, H, K]
+    k: jax.Array,
+    v: jax.Array,  # [B, T, H, V]
+    w: jax.Array,
+    u: jax.Array,  # [H, K]
+    *,
+    chunk: int = 32,
+    impl: str = "auto",
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y [B,T,H,V], final_state [B,H,K,V]).
+
+    impls: "xla" = chunked batch path (scan_utils — clamped decay, fast under
+    GSPMD); "ref" = exact sequential oracle; "pallas"/"pallas_interpret" =
+    the exact TPU kernel."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    if impl == "xla":
+        from repro.models.scan_utils import wkv6_chunked
+
+        y, s = wkv6_chunked(r, k, v, w, u)
+        return y, s
+    to_bh = lambda x: x.transpose(0, 2, 1, 3).reshape(B * H, T, -1)
+    if impl == "ref":
+        y, s = wkv6_ref(
+            to_bh(r), to_bh(k), to_bh(v), to_bh(w),
+            jnp.tile(u, (B, 1)),
+        )
+    else:
+        y, s = wkv6_pallas(
+            to_bh(r), to_bh(k), to_bh(v), to_bh(w),
+            jnp.tile(u, (B, 1)),
+            chunk=chunk, interpret=(impl == "pallas_interpret"),
+        )
+    y = y.reshape(B, H, T, V).transpose(0, 2, 1, 3)
+    return y, s.reshape(B, H, K, V)

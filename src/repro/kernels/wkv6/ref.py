@@ -1,0 +1,29 @@
+"""Exact sequential oracle for the WKV6 kernel (per-token recurrence)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(
+    r: jax.Array,  # [BH, T, K]
+    k: jax.Array,  # [BH, T, K]
+    v: jax.Array,  # [BH, T, V]
+    w: jax.Array,  # [BH, T, K] decay in (0, 1)
+    u: jax.Array,  # [BH, K] bonus
+    state: jax.Array | None = None,  # [BH, K, V]
+) -> tuple[jax.Array, jax.Array]:
+    BH, T, K = r.shape
+    V = v.shape[-1]
+    s0 = state.astype(jnp.float32) if state is not None else jnp.zeros((BH, K, V), jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # [BH, K/V]
+        kv = kt[..., :, None] * vt[..., None, :]
+        yt = jnp.einsum("bk,bkv->bv", rt, s + u[..., :, None] * kv)
+        return wt[..., None] * s + kv, yt
+
+    xs = tuple(jnp.moveaxis(t, 1, 0).astype(jnp.float32) for t in (r, k, v, w))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), s_fin

@@ -1,0 +1,131 @@
+"""Post-partitioning HLO analysis: collective-traffic accounting.
+
+``compiled.cost_analysis()`` has no collective-bytes entry, so we parse the
+optimized HLO text and sum per-device bytes moved for every collective op,
+using ring-algorithm byte counts:
+
+  all-gather        : result_bytes * (g-1)/g     (bytes received per device)
+  reduce-scatter    : result_bytes * (g-1)       (operand = result * g)
+  all-reduce        : 2 * bytes * (g-1)/g        (reduce-scatter + all-gather)
+  all-to-all        : bytes * (g-1)/g
+  collective-permute: bytes
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.:  %all-gather.1 = bf16[2,4096,896]{2,1,0} all-gather(bf16[...] %x), ...
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\](?:\{[^}]*\})?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype == "token" or dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict = field(default_factory=lambda: defaultdict(int))
+    bytes_by_kind: dict = field(default_factory=lambda: defaultdict(float))
+    grad_ar_bytes: float = 0.0  # all-reduces on the backward (grad-sync) path
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_kind.values()))
+
+    @property
+    def tpu_adjusted_bytes(self) -> float:
+        """XLA:CPU lacks the reduce-scatter-creator pass TPU pipelines run, so
+        gradient partial-sums compile to full-size all-reduce (2x bytes) here.
+        Counting those at reduce-scatter cost gives the TPU-expected volume."""
+        return self.total_bytes - self.grad_ar_bytes / 2
+
+    def summary(self) -> dict:
+        return {
+            "counts": dict(self.counts),
+            "bytes_by_kind": {k: float(v) for k, v in self.bytes_by_kind.items()},
+            "total_bytes": self.total_bytes,
+            "grad_ar_bytes": float(self.grad_ar_bytes),
+            "tpu_adjusted_bytes": float(self.tpu_adjusted_bytes),
+        }
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m is None:
+            continue
+        tuple_inner, dtype, dims, kind = m.groups()
+        if "-done" in line.split("=", 1)[1][:120] and kind not in line:
+            continue
+        if tuple_inner is not None:
+            size = sum(
+                _shape_bytes(dt, dm) for dt, dm in _SHAPE_RE.findall(tuple_inner)
+            )
+        else:
+            size = _shape_bytes(dtype, dims)
+
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = len(gm.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                g = int(gi.group(2))
+        g = max(g, 1)
+
+        if kind == "all-gather":
+            moved = size * (g - 1) / g
+        elif kind == "reduce-scatter":
+            moved = size * (g - 1)
+        elif kind == "all-reduce":
+            moved = 2 * size * (g - 1) / g
+        elif kind == "all-to-all":
+            moved = size * (g - 1) / g
+        else:  # collective-permute
+            moved = size
+        stats.counts[kind] += 1
+        stats.bytes_by_kind[kind] += moved
+        if kind == "all-reduce" and "transpose(jvp" in line:
+            stats.grad_ar_bytes += moved
+    return stats
+
+
+def op_histogram(hlo_text: str, ops: tuple[str, ...] = _COLLECTIVES) -> dict:
+    out: dict[str, int] = defaultdict(int)
+    for op in ops:
+        out[op] = len(re.findall(rf"\b{op}(?:-start)?\(", hlo_text))
+    return dict(out)

@@ -1,0 +1,23 @@
+"""Production mesh construction (assignment-mandated shapes).
+
+``make_production_mesh`` is a function, not a module-level constant, so
+importing this module never touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 2, model: int = 4) -> jax.sharding.Mesh:
+    """Small mesh over whatever local devices exist (CPU tests)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = max(1, min(model, n // data))
+    return jax.make_mesh((data, model), ("data", "model"))

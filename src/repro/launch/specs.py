@@ -1,0 +1,224 @@
+"""ShapeDtypeStruct input stand-ins + sharding construction for every
+(architecture x shape) dry-run cell.  No device allocation happens here."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import get_model
+from repro.parallel.profiles import rules_for
+from repro.parallel.sharding import AxisRules, logical_to_spec
+from repro.serve.engine import cache_axes
+from repro.train.train_step import TrainState, init_train_state, train_state_axes
+
+_BATCH_AXES: dict[str, tuple[str | None, ...]] = {
+    "tokens": ("batch", "seq_act"),
+    "targets": ("batch", "seq_act"),
+    "loss_mask": ("batch", "seq_act"),
+    "embeds": ("batch", "seq_act", "embed_act"),
+    "mrope_position_ids": (None, "batch", "seq_act"),
+}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, B: int, S: int) -> dict:
+    out = {"targets": _sds((B, S), jnp.int32)}
+    if cfg.input_kind == "tokens":
+        out["tokens"] = _sds((B, S), jnp.int32)
+    else:
+        out["embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "encdec":
+            out["tokens"] = _sds((B, S), jnp.int32)
+        if cfg.input_kind == "embeds_mrope":
+            out["mrope_position_ids"] = _sds((3, B, S), jnp.int32)
+    return out
+
+
+def shardings_of(tree_specs: Any, tree_axes: Any, mesh: Mesh, rules: AxisRules) -> Any:
+    is_axes = lambda t: isinstance(t, tuple) and all(
+        isinstance(a, (str, type(None))) for a in t
+    )
+    return jax.tree.map(
+        lambda s, a: NamedSharding(mesh, logical_to_spec(a, s.shape, mesh, rules)),
+        tree_specs,
+        tree_axes,
+        is_leaf=lambda t: is_axes(t) or isinstance(t, jax.ShapeDtypeStruct),
+    )
+
+
+def batch_shardings(specs: dict, mesh: Mesh, rules: AxisRules) -> dict:
+    return {
+        k: NamedSharding(mesh, logical_to_spec(_BATCH_AXES[k], v.shape, mesh, rules))
+        for k, v in specs.items()
+    }
+
+
+def probe_pair(cfg: ModelConfig) -> tuple[ModelConfig, ModelConfig, int]:
+    """Two reduced-depth *unrolled* configs for HLO cost extrapolation.
+
+    HLO cost analysis counts while-loop (lax.scan) bodies once, so the full
+    compile under-reports repeated-layer FLOPs/bytes/collectives.  We compile
+    two shallow unrolled probes and extrapolate affinely:
+
+        corrected = f(small) + (n_units_full - 1) * (f(large) - f(small))
+
+    where a "unit" is one scanned group (layer, moe layer, griffin pattern
+    group, or encoder+decoder layer pair).
+    """
+    if cfg.family in ("dense", "rwkv6"):
+        return (
+            cfg.replace(num_layers=1, scan_unroll=True),
+            cfg.replace(num_layers=2, scan_unroll=True),
+            cfg.num_layers,
+        )
+    if cfg.family == "moe":
+        fk = cfg.moe.first_k_dense
+        return (
+            cfg.replace(num_layers=fk + 1, scan_unroll=True),
+            cfg.replace(num_layers=fk + 2, scan_unroll=True),
+            cfg.num_layers - fk,
+        )
+    if cfg.family == "griffin":
+        pat = len(cfg.griffin.pattern)
+        n_full, rem = divmod(cfg.num_layers, pat)
+        return (
+            cfg.replace(num_layers=pat + rem, scan_unroll=True),
+            cfg.replace(num_layers=2 * pat + rem, scan_unroll=True),
+            n_full,
+        )
+    if cfg.family == "encdec":
+        return (
+            cfg.replace(num_layers=1, num_encoder_layers=1, scan_unroll=True),
+            cfg.replace(num_layers=2, num_encoder_layers=2, scan_unroll=True),
+            cfg.num_layers,
+        )
+    raise ValueError(cfg.family)
+
+
+@dataclass
+class Cell:
+    """Everything needed to lower one (arch x shape x mesh) cell."""
+    step: Callable
+    in_specs: tuple
+    in_shardings: tuple
+    donate_argnums: tuple[int, ...]
+    kind: str
+    meta: dict
+
+
+def _bf16_params_specs(cfg: ModelConfig) -> Any:
+    m = get_model(cfg)
+    p = jax.eval_shape(lambda k: m.init(cfg, k), jax.random.PRNGKey(0))
+    return jax.tree.map(lambda s: _sds(s.shape, jnp.bfloat16), p)
+
+
+def input_specs(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh: Mesh,
+    *,
+    profile: str | None = None,
+    grad_accum: int = 1,
+    ocfg=None,
+) -> Cell:
+    """Build the step fn + ShapeDtypeStruct args + shardings for a cell."""
+    from repro.parallel.sharding import axis_rules
+    from repro.serve.engine import make_decode_step, make_prefill_step
+    from repro.train.optim import OptimizerConfig
+    from repro.train.train_step import make_train_step
+
+    rules = rules_for(cfg, shape.kind, profile)
+    m = get_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        state_specs = jax.eval_shape(
+            lambda k: init_train_state(cfg, k), jax.random.PRNGKey(0)
+        )
+        state_shard = shardings_of(state_specs, train_state_axes(cfg), mesh, rules)
+        bspecs = train_batch_specs(cfg, B, S)
+        bshard = batch_shardings(bspecs, mesh, rules)
+        step = make_train_step(cfg, ocfg or OptimizerConfig(), grad_accum=grad_accum)
+
+        def wrapped(state, batch):
+            with axis_rules(mesh, rules):
+                return step(state, batch)
+
+        return Cell(
+            step=wrapped,
+            in_specs=(state_specs, bspecs),
+            in_shardings=(state_shard, bshard),
+            donate_argnums=(0,),
+            kind="train",
+            meta={"tokens": B * S, "rules": "train"},
+        )
+
+    params_specs = _bf16_params_specs(cfg)
+    params_axes = m.param_axes(cfg)
+    params_shard = shardings_of(params_specs, params_axes, mesh, rules)
+
+    if shape.kind == "prefill":
+        cache_specs = jax.eval_shape(
+            lambda: m.init_cache(cfg, B, S)
+            if cfg.family != "encdec"
+            else m.init_cache(cfg, B, S, S)
+        )
+        cshard = shardings_of(cache_specs, cache_axes(cache_specs), mesh, rules)
+        bspecs = train_batch_specs(cfg, B, S)
+        bspecs.pop("targets")
+        bshard = batch_shardings(bspecs, mesh, rules)
+        step = make_prefill_step(cfg)
+
+        def wrapped(params, batch, cache):
+            with axis_rules(mesh, rules):
+                return step(params, batch, cache)
+
+        return Cell(
+            step=wrapped,
+            in_specs=(params_specs, bspecs, cache_specs),
+            in_shardings=(params_shard, bshard, cshard),
+            donate_argnums=(2,),
+            kind="prefill",
+            meta={"tokens": B * S},
+        )
+
+    # decode: one new token against a cache of seq_len
+    cache_specs = jax.eval_shape(
+        lambda: m.init_cache(cfg, B, S)
+        if cfg.family != "encdec"
+        else m.init_cache(cfg, B, S, S)
+    )
+    cshard = shardings_of(cache_specs, cache_axes(cache_specs), mesh, rules)
+    if cfg.input_kind == "tokens" or cfg.family == "encdec":
+        tok_specs = _sds((B,), jnp.int32)
+    else:
+        tok_specs = _sds((B, 1, cfg.d_model), jnp.bfloat16)
+    tok_shard = NamedSharding(
+        mesh, logical_to_spec(("batch",) + (None,) * (tok_specs.ndim - 1),
+                              tok_specs.shape, mesh, rules)
+    )
+    pos_specs = _sds((), jnp.int32)
+    pos_shard = NamedSharding(mesh, logical_to_spec((), (), mesh, rules))
+    step = make_decode_step(cfg)
+
+    def wrapped(params, cache, tokens, pos):
+        with axis_rules(mesh, rules):
+            return step(params, cache, tokens, pos)
+
+    return Cell(
+        step=wrapped,
+        in_specs=(params_specs, cache_specs, tok_specs, pos_specs),
+        in_shardings=(params_shard, cshard, tok_shard, pos_shard),
+        donate_argnums=(1,),
+        kind="decode",
+        meta={"tokens": B},
+    )

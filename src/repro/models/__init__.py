@@ -1,0 +1,3 @@
+from repro.models.model import Model, get_model, make_batch, count_params
+
+__all__ = ["Model", "get_model", "make_batch", "count_params"]

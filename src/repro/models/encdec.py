@@ -1,0 +1,295 @@
+"""Encoder-decoder LM (seamless-m4t family).
+
+Encoder consumes precomputed modality embeddings (the audio frontend stub per
+the assignment); decoder is a causal LM with cross-attention to encoder memory.
+Serving caches: growing self-attention KV + static cross-attention KV computed
+once from the encoder output at prefill.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.hooks import Collector, LayerScoped, NULL_COLLECTOR
+from repro.parallel.sharding import shard_act
+
+
+# ---------------------------------------------------------------------------
+# cross attention
+# ---------------------------------------------------------------------------
+
+
+def cross_attn_init(b: L.ParamBuilder, cfg: ModelConfig):
+    D, H, K, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    b.param("wq", (D, H, dh), ("embed_w", "heads_w", "head_dim_w"), fan_in=D)
+    b.param("wk", (D, K, dh), ("embed_w", "kv_heads_w", "head_dim_w"), fan_in=D)
+    b.param("wv", (D, K, dh), ("embed_w", "kv_heads_w", "head_dim_w"), fan_in=D)
+    b.param("wo", (H, dh, D), ("heads_w", "head_dim_w", "embed_w"),
+            fan_in=H * dh, scale=1.0 / math.sqrt(2 * cfg.num_layers))
+
+
+def cross_kv(p: dict, cfg: ModelConfig, memory: jax.Array) -> tuple[jax.Array, jax.Array]:
+    k = jnp.einsum("btd,dhk->bthk", memory, p["wk"].astype(memory.dtype))
+    v = jnp.einsum("btd,dhk->bthk", memory, p["wv"].astype(memory.dtype))
+    k = shard_act(k, ("batch", "kv_time", "kv_heads_act", "head_dim_act"))
+    v = shard_act(v, ("batch", "kv_time", "kv_heads_act", "head_dim_act"))
+    return k, v
+
+
+def cross_attn_apply(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,  # [B, S, D] decoder stream
+    kv: tuple[jax.Array, jax.Array],  # precomputed memory K/V [B, T, K, dh]
+    collector: Collector = NULL_COLLECTOR,
+) -> jax.Array:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    q = shard_act(q, ("batch", "seq", "heads_act", "head_dim_act"))
+    k, v = kv
+    S = x.shape[1]
+    o = L.attention(
+        q, k.astype(x.dtype), v.astype(x.dtype),
+        scale=1.0 / math.sqrt(cfg.head_dim),
+        positions_q=jnp.zeros((S,), jnp.int32),
+        causal=False,
+        impl=cfg.attn_impl,
+        kv_chunk=cfg.attn_kv_chunk,
+        collector=collector,
+    )
+    o = collector.tag("cross_attn_out", o)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def enc_block_init(b: L.ParamBuilder, cfg: ModelConfig):
+    L.norm_init(b, "ln1", cfg.d_model, cfg.norm_kind)
+    L.norm_init(b, "ln2", cfg.d_model, cfg.norm_kind)
+    L.gqa_init(b.sub("attn"), cfg)
+    L.mlp_init(b.sub("mlp"), cfg)
+
+
+def enc_block_apply(p, cfg, x, *, positions, collector):
+    x = shard_act(x, ("batch", "seq_act", "embed_act"))
+    h = L.norm_apply(p["ln1"], x, cfg.norm_kind, cfg.norm_eps)
+    a, _ = L.gqa_apply(p["attn"], cfg, h, positions=positions, causal=False,
+                       collector=collector)
+    x = x + collector.tag("att_resid", a)
+    h = L.norm_apply(p["ln2"], x, cfg.norm_kind, cfg.norm_eps)
+    x = x + collector.tag("ffn_resid", L.mlp_apply(p["mlp"], cfg, h, collector))
+    return shard_act(x, ("batch", "seq_act", "embed_act"))
+
+
+def dec_block_init(b: L.ParamBuilder, cfg: ModelConfig):
+    L.norm_init(b, "ln1", cfg.d_model, cfg.norm_kind)
+    L.norm_init(b, "ln_cross", cfg.d_model, cfg.norm_kind)
+    L.norm_init(b, "ln2", cfg.d_model, cfg.norm_kind)
+    L.gqa_init(b.sub("attn"), cfg)
+    cross_attn_init(b.sub("cross"), cfg)
+    L.mlp_init(b.sub("mlp"), cfg)
+
+
+def dec_block_apply(
+    p, cfg, x, *, positions, mem_kv, cache=None, cache_pos=None, collector
+):
+    x = shard_act(x, ("batch", "seq_act", "embed_act"))
+    h = L.norm_apply(p["ln1"], x, cfg.norm_kind, cfg.norm_eps)
+    self_cache = None if cache is None else {"k": cache["k"], "v": cache["v"]}
+    a, new_self = L.gqa_apply(
+        p["attn"], cfg, h, positions=positions, cache=self_cache,
+        cache_pos=cache_pos, collector=collector,
+    )
+    x = x + collector.tag("att_resid", a)
+    h = L.norm_apply(p["ln_cross"], x, cfg.norm_kind, cfg.norm_eps)
+    x = x + cross_attn_apply(p["cross"], cfg, h, mem_kv, collector)
+    h = L.norm_apply(p["ln2"], x, cfg.norm_kind, cfg.norm_eps)
+    x = x + collector.tag("ffn_resid", L.mlp_apply(p["mlp"], cfg, h, collector))
+    x = shard_act(x, ("batch", "seq_act", "embed_act"))
+    new_cache = None
+    if cache is not None:
+        new_cache = {**new_self, "ck": cache["ck"], "cv": cache["cv"]}
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+
+def init(cfg: ModelConfig, key: jax.Array) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    b = L.ParamBuilder(key, dtype)
+    L.embed_init(b, cfg)
+    L.norm_init(b, "enc_final_norm", cfg.d_model, cfg.norm_kind)
+    L.norm_init(b, "final_norm", cfg.d_model, cfg.norm_kind)
+
+    def one_enc(k):
+        gb = L.ParamBuilder(k, dtype)
+        enc_block_init(gb, cfg)
+        return gb.params
+
+    def one_dec(k):
+        gb = L.ParamBuilder(k, dtype)
+        dec_block_init(gb, cfg)
+        return gb.params
+
+    b.params["encoder"] = jax.vmap(one_enc)(
+        jax.random.split(b.split(), cfg.num_encoder_layers)
+    )
+    b.params["decoder"] = jax.vmap(one_dec)(
+        jax.random.split(b.split(), cfg.num_layers)
+    )
+    return b.params
+
+
+def param_axes(cfg: ModelConfig) -> dict:
+    captured: dict = {}
+
+    def run_top(key):
+        b = L.ParamBuilder(key, jnp.dtype(cfg.param_dtype))
+        L.embed_init(b, cfg)
+        L.norm_init(b, "enc_final_norm", cfg.d_model, cfg.norm_kind)
+        L.norm_init(b, "final_norm", cfg.d_model, cfg.norm_kind)
+        captured.update(b.axes)
+        return b.params
+
+    jax.eval_shape(run_top, jax.random.PRNGKey(0))
+    from repro.models.lm import _prepend_layers_axis
+
+    for name, init_fn in (("encoder", enc_block_init), ("decoder", dec_block_init)):
+        cap: dict = {}
+
+        def run(key, init_fn=init_fn, cap=cap):
+            gb = L.ParamBuilder(key, jnp.dtype(cfg.param_dtype))
+            init_fn(gb, cfg)
+            cap.update(gb.axes)
+            return gb.params
+
+        jax.eval_shape(run, jax.random.PRNGKey(0))
+        captured[name] = _prepend_layers_axis(cap)
+    return captured
+
+
+def _maybe_remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    policy = (
+        jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        if cfg.remat == "dots"
+        else jax.checkpoint_policies.nothing_saveable
+    )
+    return jax.checkpoint(fn, policy=policy, prevent_cse=False)
+
+
+def encode(cfg, params, embeds, collector=NULL_COLLECTOR):
+    x = embeds.astype(jnp.dtype(cfg.compute_dtype))
+    x = shard_act(x, ("batch", "seq_act", "embed_act"))
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    def body(carry, xs):
+        lp, g = xs
+        col = LayerScoped(collector, g)
+        return enc_block_apply(lp, cfg, carry, positions=positions, collector=col), None
+
+    body = _maybe_remat(cfg, body)
+    from repro.models.lm import maybe_scan
+
+    x, _ = maybe_scan(
+        body, x, (params["encoder"], jnp.arange(cfg.num_encoder_layers)),
+        cfg.num_encoder_layers, cfg.scan_unroll,
+    )
+    return L.norm_apply(params["enc_final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+
+
+def _decode_stack(cfg, params, x, memory, *, cache=None, cache_pos=None,
+                  collector=NULL_COLLECTOR):
+    B, S, _ = x.shape
+    positions = jnp.arange(S) if cache_pos is None else cache_pos + jnp.arange(S)
+
+    def body(carry, xs):
+        lp, layer_cache, g = xs
+        col = LayerScoped(collector, g)
+        if layer_cache is not None:
+            mem_kv = (layer_cache["ck"], layer_cache["cv"])
+        else:
+            mem_kv = cross_kv(lp["cross"], cfg, memory)
+        xc, new_cache = dec_block_apply(
+            lp, cfg, carry, positions=positions, mem_kv=mem_kv,
+            cache=layer_cache, cache_pos=cache_pos, collector=col,
+        )
+        return xc, new_cache
+
+    body = _maybe_remat(cfg, body)
+    from repro.models.lm import maybe_scan
+
+    x, new_cache = maybe_scan(
+        body, x, (params["decoder"], cache, jnp.arange(cfg.num_layers)),
+        cfg.num_layers, cfg.scan_unroll,
+    )
+    x = L.norm_apply(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+    return x, (new_cache if cache is not None else None)
+
+
+def loss_fn(cfg, params, batch, collector=NULL_COLLECTOR):
+    memory = encode(cfg, params, batch["embeds"], collector)
+    dtype = jnp.dtype(cfg.compute_dtype)
+    x = L.embed_apply(params, cfg, batch["tokens"], dtype)
+    hidden, _ = _decode_stack(cfg, params, x, memory, collector=collector)
+    total, count = L.chunked_xent(
+        params, cfg, hidden, batch["targets"], batch.get("loss_mask")
+    )
+    ce = total / jnp.maximum(count, 1.0)
+    return ce, {"loss": ce, "ce": ce, "aux_loss": jnp.zeros((), jnp.float32)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, src_len: int) -> dict:
+    L_dec = cfg.num_layers
+    K, dh = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((L_dec, batch, cache_len, K, dh), jnp.bfloat16),
+        "v": jnp.zeros((L_dec, batch, cache_len, K, dh), jnp.bfloat16),
+        "ck": jnp.zeros((L_dec, batch, src_len, K, dh), jnp.bfloat16),
+        "cv": jnp.zeros((L_dec, batch, src_len, K, dh), jnp.bfloat16),
+    }
+
+
+def prefill(cfg, params, batch, cache, collector=NULL_COLLECTOR):
+    """Encode source embeddings, fill cross-KV, prefill decoder self-KV over
+    the target prompt.  Returns (cache, last logits [B, V])."""
+    memory = encode(cfg, params, batch["embeds"], collector)
+
+    # fill static cross-attention caches per layer
+    def fill(lp):
+        k, v = cross_kv(lp["cross"], cfg, memory)
+        return k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+
+    ck, cv = jax.vmap(fill)(params["decoder"])
+    cache = {**cache, "ck": ck, "cv": cv}
+
+    dtype = jnp.dtype(cfg.compute_dtype)
+    x = L.embed_apply(params, cfg, batch["tokens"], dtype)
+    hidden, new_cache = _decode_stack(
+        cfg, params, x, memory, cache=cache, cache_pos=jnp.int32(0),
+        collector=collector,
+    )
+    logits = L.logits_fn(params, cfg, hidden[:, -1:, :])[:, 0]
+    return new_cache, logits
+
+
+def decode_step(cfg, params, cache, tokens, pos, collector=NULL_COLLECTOR):
+    dtype = jnp.dtype(cfg.compute_dtype)
+    x = L.embed_apply(params, cfg, tokens.reshape(-1, 1), dtype)
+    hidden, new_cache = _decode_stack(
+        cfg, params, x, None, cache=cache, cache_pos=pos, collector=collector,
+    )
+    logits = L.logits_fn(params, cfg, hidden)[:, 0]
+    return new_cache, logits

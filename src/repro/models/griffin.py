@@ -1,0 +1,163 @@
+"""Griffin / RecurrentGemma blocks: RG-LRU recurrent mix + local attention.
+
+Follows arXiv:2402.19427: the temporal-mixing layer alternates in a
+(rec, rec, attn) pattern.  A recurrent block is
+``(gelu gate) * rglru(conv1d(linear(x)))`` with the RG-LRU
+``h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * x_t)``,
+``a_t = exp(-c * softplus(Lambda) * r_t)``.  Attention blocks use MQA over a
+sliding window.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.hooks import Collector, NULL_COLLECTOR
+from repro.models.layers import (
+    ParamBuilder,
+    gqa_apply,
+    gqa_init,
+    mlp_apply,
+    mlp_init,
+    norm_apply,
+    norm_init,
+)
+from repro.models.scan_utils import causal_conv1d, lru_scan
+from repro.parallel.sharding import shard_act
+
+
+def rglru_init(b: ParamBuilder, cfg: ModelConfig):
+    W = cfg.lru_width
+    b.param("w_a", (W, W), ("embed_w", "qkv"), fan_in=W)
+    b.param("b_a", (W,), ("qkv",), init="zeros")
+    b.param("w_i", (W, W), ("embed_w", "qkv"), fan_in=W)
+    b.param("b_i", (W,), ("qkv",), init="zeros")
+    # Lambda init so that softplus gives decay in a useful range (Griffin A.2)
+    b.param("lam", (W,), ("qkv",), init="uniform", scale=1.0)
+
+
+def rglru_apply(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,  # [B, S, W]
+    h0: jax.Array | None = None,  # [B, W]
+    collector: Collector = NULL_COLLECTOR,
+) -> tuple[jax.Array, jax.Array]:
+    c = cfg.griffin.c
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", x, p["w_a"].astype(x.dtype)) + p["b_a"].astype(x.dtype)
+    ).astype(jnp.float32)
+    i = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", x, p["w_i"].astype(x.dtype)) + p["b_i"].astype(x.dtype)
+    )
+    log_a = -c * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r  # [B,S,W] <= 0
+    a = jnp.exp(log_a)
+    a = collector.tag("rglru_decay", a)
+    # input normalization sqrt(1 - a^2), computed stably
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    b_in = beta * (i * x).astype(jnp.float32)
+    if cfg.kernels_impl != "xla" and h0 is None and x.shape[1] > 1:
+        from repro.kernels.rglru.ops import rglru_scan
+
+        h, h_last = rglru_scan(a, b_in, impl=cfg.kernels_impl)
+    else:
+        h, h_last = lru_scan(a, b_in, h0)
+    return h.astype(x.dtype), h_last
+
+
+def recurrent_block_init(b: ParamBuilder, cfg: ModelConfig):
+    D, W = cfg.d_model, cfg.lru_width
+    cw = cfg.griffin.conv_width
+    b.param("w_gate", (D, W), ("embed_w", "qkv"), fan_in=D)
+    b.param("w_x", (D, W), ("embed_w", "qkv"), fan_in=D)
+    b.param("conv_w", (cw, W), ("conv", "qkv"), init="normal", fan_in=cw)
+    b.param("conv_b", (W,), ("qkv",), init="zeros")
+    rglru_init(b.sub("rglru"), cfg)
+    b.param("w_out", (W, D), ("qkv", "embed_w"), fan_in=W,
+            scale=1.0 / math.sqrt(2 * cfg.num_layers))
+
+
+def recurrent_block_apply(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,  # [B, S, D]
+    *,
+    state: dict | None = None,  # {"conv": [B, cw-1, W], "h": [B, W]}
+    collector: Collector = NULL_COLLECTOR,
+) -> tuple[jax.Array, dict | None]:
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"].astype(x.dtype)))
+    y = jnp.einsum("bsd,dw->bsw", x, p["w_x"].astype(x.dtype))
+    y = shard_act(y, ("batch", "seq_act", "mlp_act"))
+    conv_prev = state["conv"] if state is not None else None
+    y, conv_new = causal_conv1d(y, p["conv_w"], p["conv_b"], conv_prev)
+    h0 = state["h"] if state is not None else None
+    y, h_last = rglru_apply(p["rglru"], cfg, y, h0, collector)
+    y = collector.tag("rglru_out", y)
+    out = jnp.einsum("bsw,wd->bsd", gate * y, p["w_out"].astype(x.dtype))
+    new_state = None
+    if state is not None:
+        new_state = {"conv": conv_new, "h": h_last}
+    return out, new_state
+
+
+def griffin_block_init(b: ParamBuilder, cfg: ModelConfig, kind: str):
+    norm_init(b, "ln1", cfg.d_model, cfg.norm_kind)
+    norm_init(b, "ln2", cfg.d_model, cfg.norm_kind)
+    if kind == "rec":
+        recurrent_block_init(b.sub("mix"), cfg)
+    else:
+        gqa_init(b.sub("mix"), cfg, window=cfg.griffin.window)
+    mlp_init(b.sub("mlp"), cfg)
+
+
+def griffin_block_apply(
+    p: dict,
+    cfg: ModelConfig,
+    kind: str,
+    x: jax.Array,
+    *,
+    positions: jax.Array,
+    state: dict | None = None,
+    cache_pos: jax.Array | None = None,
+    collector: Collector = NULL_COLLECTOR,
+) -> tuple[jax.Array, dict | None]:
+    x = shard_act(x, ("batch", "seq_act", "embed_act"))
+    h = norm_apply(p["ln1"], x, cfg.norm_kind, cfg.norm_eps)
+    if kind == "rec":
+        a, new_state = recurrent_block_apply(
+            p["mix"], cfg, h, state=state, collector=collector
+        )
+    else:
+        a, new_state = gqa_apply(
+            p["mix"], cfg, h,
+            positions=positions,
+            window=cfg.griffin.window,
+            cache=state,
+            cache_pos=cache_pos,
+            collector=collector,
+        )
+    x = x + collector.tag("att_resid", a)
+    h = norm_apply(p["ln2"], x, cfg.norm_kind, cfg.norm_eps)
+    f = mlp_apply(p["mlp"], cfg, h, collector)
+    x = x + collector.tag("ffn_resid", f)
+    x = shard_act(x, ("batch", "seq_act", "embed_act"))
+    return x, new_state
+
+
+def griffin_init_state(cfg: ModelConfig, kind: str, batch: int, cache_len: int) -> dict:
+    if kind == "rec":
+        return {
+            "conv": jnp.zeros((batch, cfg.griffin.conv_width - 1, cfg.lru_width), jnp.float32),
+            "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+        }
+    # Full-length linear cache; the window mask limits attention reach.  (A
+    # ring buffer would cap memory at `window`; linear layout keeps the
+    # GSPMD-sharded time dim simple and the T-sharding already divides it.)
+    return {
+        "k": jnp.zeros((batch, cache_len, cfg.num_kv_heads, cfg.head_dim), jnp.bfloat16),
+        "v": jnp.zeros((batch, cache_len, cfg.num_kv_heads, cfg.head_dim), jnp.bfloat16),
+    }

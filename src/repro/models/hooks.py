@@ -1,0 +1,49 @@
+"""Introspection hooks threaded through model code (MegaScope attach point).
+
+Model forward functions accept an optional ``Collector``; the default one is
+inert (captures nothing, perturbs nothing) so the model code stays clean and
+zero-overhead when MegaScope is disabled — the paper's "optional, activated
+via runtime flags" property.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+
+class Collector:
+    """No-op probe collector; ``repro.core.scope`` subclasses it."""
+
+    def tag(self, name: str, value: jax.Array, **meta: Any) -> jax.Array:
+        """Observe ``value`` under ``name``; may return a perturbed copy."""
+        return value
+
+    def drain(self) -> dict[str, Any]:
+        """Return and clear captured (compressed) values.  Called at the end
+        of each scanned layer body so captures flow out through scan ys."""
+        return {}
+
+    def aux(self) -> dict[str, Any]:
+        return {}
+
+
+NULL_COLLECTOR = Collector()
+
+
+class LayerScoped(Collector):
+    """Wraps a collector, prefixing tags with a layer index (used in scans)."""
+
+    def __init__(self, inner: Collector, layer: jax.Array | int):
+        self.inner = inner
+        self.layer = layer
+
+    def tag(self, name: str, value: jax.Array, **meta: Any) -> jax.Array:
+        return self.inner.tag(name, value, layer=self.layer, **meta)
+
+    def drain(self) -> dict[str, Any]:
+        return self.inner.drain()
+
+    def aux(self) -> dict[str, Any]:
+        return self.inner.aux()

@@ -1,0 +1,108 @@
+"""Family dispatch: a uniform Model API over lm.py and encdec.py.
+
+    m = get_model(cfg)
+    params = m.init(cfg, key)
+    loss, metrics = m.loss_fn(cfg, params, batch)
+    cache = m.init_cache(cfg, batch_size, cache_len)
+    cache, logits = m.prefill(cfg, params, batch, cache)
+    cache, logits = m.decode_step(cfg, params, cache, tokens, pos)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, lm
+
+
+@dataclass(frozen=True)
+class Model:
+    init: Callable
+    param_axes: Callable
+    loss_fn: Callable
+    init_cache: Callable
+    prefill: Callable
+    decode_step: Callable
+    forward: Callable | None = None
+
+
+def _encdec_init_cache(cfg, batch, cache_len, src_len=None):
+    return encdec.init_cache(cfg, batch, cache_len, src_len or cache_len)
+
+
+ENCDEC = Model(
+    init=encdec.init,
+    param_axes=encdec.param_axes,
+    loss_fn=encdec.loss_fn,
+    init_cache=_encdec_init_cache,
+    prefill=encdec.prefill,
+    decode_step=encdec.decode_step,
+)
+
+LM = Model(
+    init=lm.init,
+    param_axes=lm.param_axes,
+    loss_fn=lm.loss_fn,
+    init_cache=lm.init_cache,
+    prefill=lm.prefill,
+    decode_step=lm.decode_step,
+    forward=lm.forward,
+)
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    return ENCDEC if cfg.family == "encdec" else LM
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, key: jax.Array) -> dict:
+    """Synthetic training batch matching the arch's input kind."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    out: dict[str, Any] = {
+        "targets": jax.random.randint(k2, (batch, seq), 0, cfg.vocab_size),
+    }
+    if cfg.input_kind == "tokens":
+        out["tokens"] = jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size)
+    else:
+        out["embeds"] = jax.random.normal(k1, (batch, seq, cfg.d_model), jnp.float32)
+        if cfg.family == "encdec":
+            out["tokens"] = jax.random.randint(k3, (batch, seq), 0, cfg.vocab_size)
+        if cfg.input_kind == "embeds_mrope":
+            pos = jnp.broadcast_to(jnp.arange(seq), (batch, seq))
+            out["mrope_position_ids"] = jnp.stack([pos, pos, pos]).astype(jnp.int32)
+    return out
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Active parameters per token (for MODEL_FLOPS = 6 * N_active * D)."""
+    total = _dense_param_count(cfg)
+    if cfg.family == "moe":
+        mo = cfg.moe
+        expert_p = 3 * cfg.d_model * mo.expert_d_ff
+        n_moe_layers = cfg.num_layers - mo.first_k_dense
+        total -= n_moe_layers * mo.num_experts * expert_p
+        total += n_moe_layers * mo.top_k * expert_p
+    return total
+
+
+def _dense_param_count(cfg: ModelConfig) -> int:
+    """Parameter count computed analytically from shapes (excl. embeddings
+    for FLOPs purposes the embedding gather is not a matmul; the unembed is)."""
+    cfg_counts = jax.eval_shape(
+        lambda k: get_model(cfg).init(cfg, k), jax.random.PRNGKey(0)
+    )
+    n = sum(int(x.size) for x in jax.tree.leaves(cfg_counts))
+    # exclude the input embedding gather (not matmul FLOPs).  For tied
+    # embeddings the single table also serves as the unembed matmul, so it
+    # stays counted.
+    if not cfg.tie_embeddings:
+        n -= cfg.vocab_size * cfg.d_model
+    return n

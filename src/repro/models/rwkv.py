@@ -1,0 +1,177 @@
+"""RWKV-6 ("Finch") blocks: data-dependent token shift + decay WKV attention.
+
+Follows arXiv:2404.05892: time-mix block (ddlerp token shift via a small
+tanh-LoRA, data-dependent per-channel decay w_t = exp(-exp(w0 + lora(x))),
+per-head matrix-valued WKV state with bonus u) and channel-mix block
+(squared-ReLU with simple token-shift lerp).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.hooks import Collector, NULL_COLLECTOR
+from repro.models.layers import ParamBuilder, norm_apply, norm_init
+from repro.models.scan_utils import shift_tokens, wkv6_chunked, wkv6_sequential
+from repro.parallel.sharding import shard_act
+
+MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def time_mix_init(b: ParamBuilder, cfg: ModelConfig):
+    D = cfg.d_model
+    r = cfg.rwkv.ddlerp_rank
+    dr = cfg.rwkv.decay_rank
+    H = cfg.num_heads
+    hs = cfg.rwkv.head_size
+    b.param("mu_x", (D,), ("embed_w",), init="zeros")
+    b.param("mu", (5, D), (None, "embed_w"), init="zeros")
+    b.param("w_mix1", (D, 5, r), ("embed_w", None, None), fan_in=D)
+    b.param("w_mix2", (5, r, D), (None, None, "embed_w"), fan_in=r)
+    b.param("w_r", (D, D), ("embed_w", "qkv"), fan_in=D)
+    b.param("w_k", (D, D), ("embed_w", "qkv"), fan_in=D)
+    b.param("w_v", (D, D), ("embed_w", "qkv"), fan_in=D)
+    b.param("w_g", (D, D), ("embed_w", "qkv"), fan_in=D)
+    b.param("w_o", (D, D), ("qkv", "embed_w"), fan_in=D,
+            scale=1.0 / math.sqrt(2 * cfg.num_layers))
+    b.param("w0", (D,), ("embed_w",), init="const", fill=-5.0)
+    b.param("w_decay1", (D, dr), ("embed_w", None), fan_in=D)
+    b.param("w_decay2", (dr, D), (None, "embed_w"), fan_in=dr)
+    b.param("u", (H, hs), (None, None), init="normal", fan_in=hs)
+    norm_init(b, "ln_x", D, "layernorm")  # per-head group norm scales
+
+
+def time_mix_apply(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,  # [B, S, D]
+    *,
+    state: dict | None = None,  # {"x_prev": [B,D], "wkv": [B,H,K,V]}
+    collector: Collector = NULL_COLLECTOR,
+) -> tuple[jax.Array, dict | None]:
+    B, S, D = x.shape
+    H, hs = cfg.num_heads, cfg.rwkv.head_size
+    prev = state["x_prev"] if state is not None else None
+    xx = shift_tokens(x, prev) - x  # [B,S,D]
+    xxx = x + xx * p["mu_x"].astype(x.dtype)
+    lora = jnp.tanh(jnp.einsum("bsd,dnr->bsnr", xxx, p["w_mix1"].astype(x.dtype)))
+    mm = jnp.einsum("bsnr,nrd->nbsd", lora, p["w_mix2"].astype(x.dtype))
+    mixed = {
+        name: x + xx * (p["mu"][i].astype(x.dtype) + mm[i])
+        for i, name in enumerate(MIX_NAMES)
+    }
+    r = jnp.einsum("bsd,de->bse", mixed["r"], p["w_r"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", mixed["k"], p["w_k"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", mixed["v"], p["w_v"].astype(x.dtype))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", mixed["g"], p["w_g"].astype(x.dtype)))
+    ww = p["w0"].astype(jnp.float32) + jnp.einsum(
+        "bsd,dr->bsr", mixed["w"], p["w_decay1"].astype(x.dtype)
+    ).astype(jnp.float32) @ p["w_decay2"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(ww))  # [B,S,D] decay in (0,1)
+    w = collector.tag("wkv_decay", w)
+
+    rh = r.reshape(B, S, H, hs)
+    kh = k.reshape(B, S, H, hs)
+    vh = v.reshape(B, S, H, hs)
+    wh = w.reshape(B, S, H, hs)
+    s0 = state["wkv"] if state is not None else None
+    if S == 1:
+        y, s_new = wkv6_sequential(rh, kh, vh, wh, p["u"].astype(jnp.float32), s0)
+    elif cfg.kernels_impl != "xla" and s0 is None:
+        from repro.kernels.wkv6.ops import wkv6 as wkv6_kernel
+
+        y, s_new = wkv6_kernel(rh, kh, vh, wh, p["u"].astype(jnp.float32),
+                               impl=cfg.kernels_impl)
+    else:
+        y, s_new = wkv6_chunked(rh, kh, vh, wh, p["u"].astype(jnp.float32), s0)
+    y = collector.tag("wkv_out", y)
+
+    # per-head group norm, then gate and project
+    yf = y.astype(jnp.float32)
+    mu = yf.mean(-1, keepdims=True)
+    var = ((yf - mu) ** 2).mean(-1, keepdims=True)
+    yf = (yf - mu) * jax.lax.rsqrt(var + 64e-5)
+    yf = yf.reshape(B, S, D)
+    yf = yf * p["ln_x"]["scale"].astype(jnp.float32) + p["ln_x"]["bias"].astype(jnp.float32)
+    out = (yf.astype(x.dtype) * g) @ p["w_o"].astype(x.dtype)
+    new_state = None
+    if state is not None:
+        new_state = {"x_prev": x[:, -1], "wkv": s_new}
+    return out, new_state
+
+
+def channel_mix_init(b: ParamBuilder, cfg: ModelConfig):
+    D, F = cfg.d_model, cfg.d_ff
+    b.param("mu_k", (D,), ("embed_w",), init="zeros")
+    b.param("mu_r", (D,), ("embed_w",), init="zeros")
+    b.param("w_k", (D, F), ("embed_w", "mlp_w"), fan_in=D)
+    b.param("w_v", (F, D), ("mlp_w", "embed_w"), fan_in=F,
+            scale=1.0 / math.sqrt(2 * cfg.num_layers))
+    b.param("w_r", (D, D), ("embed_w", "qkv"), fan_in=D)
+
+
+def channel_mix_apply(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    state: dict | None = None,  # {"x_prev": [B,D]}
+    collector: Collector = NULL_COLLECTOR,
+) -> tuple[jax.Array, dict | None]:
+    prev = state["x_prev"] if state is not None else None
+    xx = shift_tokens(x, prev) - x
+    xk = x + xx * p["mu_k"].astype(x.dtype)
+    xr = x + xx * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["w_k"].astype(x.dtype))))
+    k = shard_act(k, ("batch", "seq_act", "mlp_act"))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["w_v"].astype(x.dtype))
+    out = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["w_r"].astype(x.dtype))) * kv
+    new_state = {"x_prev": x[:, -1]} if state is not None else None
+    return out, new_state
+
+
+def rwkv_block_init(b: ParamBuilder, cfg: ModelConfig):
+    norm_init(b, "ln1", cfg.d_model, cfg.norm_kind)
+    norm_init(b, "ln2", cfg.d_model, cfg.norm_kind)
+    time_mix_init(b.sub("att"), cfg)
+    channel_mix_init(b.sub("ffn"), cfg)
+
+
+def rwkv_block_apply(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    state: dict | None = None,
+    collector: Collector = NULL_COLLECTOR,
+) -> tuple[jax.Array, dict | None]:
+    att_state = state["att"] if state is not None else None
+    ffn_state = state["ffn"] if state is not None else None
+    x = shard_act(x, ("batch", "seq_act", "embed_act"))
+    h = norm_apply(p["ln1"], x, cfg.norm_kind, cfg.norm_eps)
+    a, att_new = time_mix_apply(p["att"], cfg, h, state=att_state, collector=collector)
+    x = x + collector.tag("att_resid", a)
+    h = norm_apply(p["ln2"], x, cfg.norm_kind, cfg.norm_eps)
+    f, ffn_new = channel_mix_apply(p["ffn"], cfg, h, state=ffn_state, collector=collector)
+    x = x + collector.tag("ffn_resid", f)
+    x = shard_act(x, ("batch", "seq_act", "embed_act"))
+    new_state = None
+    if state is not None:
+        new_state = {"att": att_new, "ffn": ffn_new}
+    return x, new_state
+
+
+def rwkv_init_state(cfg: ModelConfig, batch: int) -> dict:
+    """Per-layer decode/prefill carry state (stacked over layers by the LM)."""
+    H, hs = cfg.num_heads, cfg.rwkv.head_size
+    return {
+        "att": {
+            "x_prev": jnp.zeros((batch, cfg.d_model), jnp.float32),
+            "wkv": jnp.zeros((batch, H, hs, hs), jnp.float32),
+        },
+        "ffn": {"x_prev": jnp.zeros((batch, cfg.d_model), jnp.float32)},
+    }

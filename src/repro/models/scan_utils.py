@@ -1,0 +1,219 @@
+"""Chunked linear-recurrence utilities (RWKV6 WKV, RG-LRU).
+
+Both recurrences are evaluated with a *two-level* decomposition that keeps the
+sequence dimension shardable (context parallelism for linear-attention
+models — DESIGN.md §2.2):
+
+  1. intra-chunk: parallel within each chunk (matmul form for the matrix-state
+     WKV — MXU friendly; associative scan for the diagonal RG-LRU — exact);
+  2. inter-chunk: an associative scan over per-chunk summaries.  The summary
+     state is tiny, so when the chunk dim is sharded over the "model" axis the
+     cross-device exchange is a few MB — the TPU-native replacement for a
+     sequential per-token CUDA kernel.
+
+Numerics: the WKV chunk math uses exponentials of cumulative log-decay
+differences.  With chunk size C and per-step log-decay clamped to >= -WKV_CLAMP
+the exponent magnitude is bounded by C * WKV_CLAMP < 88 (fp32 exp range).
+Channels decaying harder than exp(-WKV_CLAMP) per step are indistinguishable
+from zero after two steps; ref.py implements the exact sequential recurrence
+and tests bound the approximation error.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+WKV_CHUNK = 32
+WKV_CLAMP = 2.0  # max |log decay| per step used by the chunked path
+
+
+def wkv6_sequential(
+    r: jax.Array,  # [B, S, H, K]
+    k: jax.Array,  # [B, S, H, K]
+    v: jax.Array,  # [B, S, H, V]
+    w: jax.Array,  # [B, S, H, K] decay in (0, 1)
+    u: jax.Array,  # [H, K] bonus
+    state: jax.Array | None = None,  # [B, H, K, V]
+) -> tuple[jax.Array, jax.Array]:
+    """Exact per-token recurrence (oracle / decode path).
+
+    y_t = r_t^T (S_t + (u * k_t) v_t^T);  S_{t+1} = diag(w_t) S_t + k_t v_t^T
+    """
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    if state is None:
+        state = jnp.zeros((B, H, K, V), jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # [B, H, K/V]
+        kv = kt[..., :, None] * vt[..., None, :]  # [B,H,K,V]
+        yt = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., None] * s + kv
+        return s, yt
+
+    xs = tuple(
+        jnp.moveaxis(t, 1, 0).astype(jnp.float32) for t in (r, k, v, w)
+    )
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), state  # [B, S, H, V], [B, H, K, V]
+
+
+def wkv6_chunked(
+    r: jax.Array,  # [B, S, H, K]
+    k: jax.Array,
+    v: jax.Array,  # [B, S, H, V]
+    w: jax.Array,  # [B, S, H, K]
+    u: jax.Array,  # [H, K]
+    state: jax.Array | None = None,  # [B, H, K, V]
+    chunk: int = WKV_CHUNK,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunk-parallel WKV: matmul-form intra-chunk + associative inter-chunk."""
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    if S % chunk != 0:
+        return wkv6_sequential(r, k, v, w, u, state)
+    nc = S // chunk
+    C = chunk
+
+    f32 = jnp.float32
+    rc = r.reshape(B, nc, C, H, K).astype(f32)
+    kc = k.reshape(B, nc, C, H, K).astype(f32)
+    vc = v.reshape(B, nc, C, H, V).astype(f32)
+    lw = jnp.clip(jnp.log(w.reshape(B, nc, C, H, K).astype(f32)), -WKV_CLAMP, -1e-6)
+    cum = jnp.cumsum(lw, axis=2)  # inclusive cumulative log decay  [B,nc,C,H,K]
+    cum_prev = cum - lw  # exclusive
+
+    qp = rc * jnp.exp(cum_prev)  # decayed queries
+    kp = kc * jnp.exp(-cum)      # inverse-decayed keys
+
+    # intra-chunk pair contributions (strictly lower triangular) + diagonal u
+    scores = jnp.einsum("bnihk,bnjhk->bnhij", qp, kp)
+    tri = jnp.tril(jnp.ones((C, C), bool), k=-1)
+    scores = jnp.where(tri[None, None, None], scores, 0.0)
+    diag = jnp.einsum("bnihk,hk,bnihk->bnhi", rc, u.astype(f32), kc)
+    y_intra = jnp.einsum("bnhij,bnjhv->bnihv", scores, vc)
+    y_intra = y_intra + diag[..., None].transpose(0, 1, 3, 2, 4) * vc
+
+    # chunk summaries: total decay + decayed key-value outer products
+    a_chunk = jnp.exp(cum[:, :, -1])  # [B,nc,H,K]
+    k_dec = kc * jnp.exp(cum[:, :, -1:, :, :] - cum)  # decay from pos to chunk end
+    m_chunk = jnp.einsum("bnjhk,bnjhv->bnhkv", k_dec, vc)  # [B,nc,H,K,V]
+
+    # inter-chunk associative scan: (a, M) o (a', M') = (a*a', a'[:,None]*M + M')
+    def combine(x, y):
+        ax, mx = x
+        ay, my = y
+        return ax * ay, ay[..., None] * mx + my
+
+    a_in, m_in = jax.lax.associative_scan(combine, (a_chunk, m_chunk), axis=1)
+    # exclusive: state entering chunk n (shift right, seed with initial state)
+    s0 = state.astype(f32) if state is not None else jnp.zeros((B, H, K, V), f32)
+    a_ex = jnp.concatenate(
+        [jnp.ones((B, 1, H, K), f32), a_in[:, :-1]], axis=1
+    )
+    m_ex = jnp.concatenate([jnp.zeros((B, 1, H, K, V), f32), m_in[:, :-1]], axis=1)
+    s_in = a_ex[..., None] * s0[:, None] + m_ex  # [B,nc,H,K,V]
+
+    y_carry = jnp.einsum("bnihk,bnhkv->bnihv", qp, s_in)
+    y = (y_intra + y_carry).reshape(B, S, H, V)
+    final_state = a_in[:, -1, ..., None] * s0 + m_in[:, -1]
+    return y, final_state
+
+
+def lru_scan(
+    a: jax.Array,  # [B, S, W] per-step decay in (0,1)
+    b: jax.Array,  # [B, S, W] per-step input
+    h0: jax.Array | None = None,  # [B, W]
+) -> tuple[jax.Array, jax.Array]:
+    """Exact diagonal linear recurrence h_t = a_t h_{t-1} + b_t via two-level
+    associative scans (chunk dim shardable).  Returns (h [B,S,W], h_last)."""
+    B, S, W = a.shape
+    f32 = jnp.float32
+    a = a.astype(f32)
+    b = b.astype(f32)
+
+    def combine(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, ay * bx + by
+
+    chunk = 128 if S % 128 == 0 else (S if S < 128 else 1)
+    if chunk > 1 and S % chunk == 0:
+        nc = S // chunk
+        ac = a.reshape(B, nc, chunk, W)
+        bc = b.reshape(B, nc, chunk, W)
+        a_c, h_c = jax.lax.associative_scan(combine, (ac, bc), axis=2)
+        a_sum, h_sum = a_c[:, :, -1], h_c[:, :, -1]  # [B,nc,W]
+        a_in, h_in = jax.lax.associative_scan(combine, (a_sum, h_sum), axis=1)
+        a_ex = jnp.concatenate([jnp.ones((B, 1, W), f32), a_in[:, :-1]], axis=1)
+        h_ex = jnp.concatenate([jnp.zeros((B, 1, W), f32), h_in[:, :-1]], axis=1)
+        if h0 is not None:
+            h_ex = h_ex + a_ex * h0[:, None].astype(f32)
+        h = h_c + a_c * h_ex[:, :, None]
+        h = h.reshape(B, S, W)
+    else:
+        a_in, h_in = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h = h_in
+        if h0 is not None:
+            h = h + a_in * h0[:, None].astype(f32)
+    return h, h[:, -1]
+
+
+def shift_tokens(
+    x: jax.Array, prev: jax.Array | None = None, n_chunks: int = 16
+) -> jax.Array:
+    """x_{t-1} stream: [B,S,D] -> [B,S,D]; position 0 sees ``prev`` (or zeros).
+
+    Sharding-aware: a plain concat/slice over a sequence dim sharded for
+    context parallelism makes GSPMD gather the full sequence per layer.
+    Instead the shift is done within shard-aligned chunks plus a halo exchange
+    of the single boundary column ([B, nc, D] — a few MB)."""
+    from repro.parallel.sharding import shard_act
+
+    B, S, D = x.shape
+    first = (
+        prev[:, None].astype(x.dtype)
+        if prev is not None
+        else jnp.zeros((B, 1, D), x.dtype)
+    )
+    if S % n_chunks != 0 or n_chunks <= 1 or S == 1:
+        return jnp.concatenate([first, x[:, :-1]], axis=1)
+    C = S // n_chunks
+    x4 = shard_act(x.reshape(B, n_chunks, C, D), ("batch", "seq_act", None, "embed_act"))
+    bound = x4[:, :, -1, :]                      # [B, nc, D] last token per chunk
+    bound_prev = jnp.concatenate([first, bound[:, :-1, :]], axis=1)  # halo
+    shifted = jnp.concatenate([bound_prev[:, :, None, :], x4[:, :, :-1, :]], axis=2)
+    shifted = shard_act(shifted, ("batch", "seq_act", None, "embed_act"))
+    return shifted.reshape(B, S, D)
+
+
+def causal_conv1d(
+    x: jax.Array,  # [B, S, W]
+    weight: jax.Array,  # [width, W] depthwise taps (tap 0 = current token)
+    bias: jax.Array | None = None,  # [W]
+    prev: jax.Array | None = None,  # [B, width-1, W] carry-in context
+    n_chunks: int = 16,
+) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv via repeated 1-token halo shifts (sharding-aware
+    like shift_tokens); returns (y, new_prev)."""
+    B, S, W = x.shape
+    width = weight.shape[0]
+    ctx = (
+        prev.astype(x.dtype)
+        if prev is not None
+        else jnp.zeros((B, width - 1, W), x.dtype)
+    )
+    y = weight[0].astype(x.dtype) * x
+    shifted = x
+    for i in range(1, width):
+        prev_col = ctx[:, width - 1 - i, :]  # x_{-i} for the first position
+        shifted = shift_tokens(shifted, prev_col, n_chunks)
+        y = y + weight[i].astype(x.dtype) * shifted
+    if bias is not None:
+        y = y + bias.astype(x.dtype)
+    if S >= width - 1 and width > 1:
+        new_prev = x[:, S - (width - 1):, :]
+    else:
+        new_prev = jnp.concatenate([ctx, x], axis=1)[:, -(width - 1):, :]
+    return y, new_prev

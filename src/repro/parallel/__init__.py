@@ -1,0 +1,21 @@
+from repro.parallel.sharding import (
+    AxisRules,
+    DEFAULT_RULES,
+    axis_rules,
+    current_mesh_and_rules,
+    logical_to_spec,
+    named_sharding,
+    param_shardings,
+    shard_act,
+)
+
+__all__ = [
+    "AxisRules",
+    "DEFAULT_RULES",
+    "axis_rules",
+    "current_mesh_and_rules",
+    "logical_to_spec",
+    "named_sharding",
+    "param_shardings",
+    "shard_act",
+]

@@ -1,0 +1,183 @@
+"""Logical-axis sharding rules (MaxText-style) for the repro framework.
+
+Every weight and activation in the model code is annotated with *logical* axis
+names (``"batch"``, ``"embed"``, ``"heads"``, ...).  A per-run rule table maps
+logical names onto physical mesh axes (``"pod"``, ``"data"``, ``"model"``).
+Resolution is size-aware: a mesh axis that does not evenly divide the
+corresponding array dimension is dropped (the dimension stays replicated), so a
+single rule table serves architectures whose head counts / widths do not divide
+the tensor-parallel degree (e.g. qwen2-0.5b's 14 heads on a 16-way axis).
+
+The rule table is also the main performance-tuning knob used by the §Perf
+hillclimb: see ``repro/configs`` for per-architecture overrides.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> tuple of mesh axes (in nesting order) or None (replicated)
+AxisRules = Mapping[str, tuple[str, ...] | None]
+
+# Default rules: FSDP ("data") x TP ("model") with pure-DP "pod" axis.
+#   - batch is sharded over pod+data (data parallelism)
+#   - model-parallel width dims (heads / mlp / vocab) go to "model"
+#   - "embed" on weights goes to "data": combined with the model axis on the
+#     other dim this gives 2-D (ZeRO-3 / FSDP + TP) weight sharding
+#   - sequence parallelism for activations between blocks uses "seq_act"
+DEFAULT_RULES: dict[str, tuple[str, ...] | None] = {
+    "batch": ("pod", "data"),
+    "seq": None,              # sequence dim of activations inside attention
+    "seq_act": None,          # sequence dim of residual-stream activations
+    "embed": ("data",),       # weight embed dim -> FSDP
+    "embed_act": None,        # activation embed dim
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": None,
+    "qkv": ("model",),        # fused qkv output dim
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "expert_mlp": None,
+    "kv_lora": None,
+    "conv": None,
+    "state": None,
+    "layers": None,           # stacked-layer leading axis (scanned over)
+    "stack": None,
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Mesh | None = None
+        self.rules: AxisRules | None = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh | None, rules: AxisRules | None = None):
+    """Context manager installing the (mesh, logical-axis rules) pair.
+
+    With no mesh installed all sharding annotations are no-ops, so model code
+    runs unchanged in single-device unit tests.
+    """
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh = mesh
+    _CTX.rules = dict(rules) if rules is not None else dict(DEFAULT_RULES)
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def current_mesh_and_rules() -> tuple[Mesh | None, AxisRules | None]:
+    return _CTX.mesh, _CTX.rules
+
+
+def _resolve_axes(
+    logical: str | None,
+    mesh: Mesh,
+    rules: AxisRules,
+    dim_size: int | None,
+    taken: set[str],
+) -> tuple[str, ...] | None:
+    """Resolve one logical axis to mesh axes, dropping non-dividing/taken axes."""
+    if logical is None:
+        return None
+    mapped = rules.get(logical)
+    if mapped is None:
+        return None
+    if isinstance(mapped, str):
+        mapped = (mapped,)
+    out: list[str] = []
+    shard = 1
+    for ax in mapped:
+        if ax not in mesh.shape or ax in taken:
+            continue
+        size = mesh.shape[ax]
+        if dim_size is not None and (dim_size % (shard * size)) != 0:
+            continue
+        out.append(ax)
+        shard *= size
+    return tuple(out) or None
+
+
+def logical_to_spec(
+    logical_axes: Sequence[str | None],
+    shape: Sequence[int] | None = None,
+    mesh: Mesh | None = None,
+    rules: AxisRules | None = None,
+) -> P:
+    """Translate a tuple of logical axis names into a PartitionSpec."""
+    if mesh is None:
+        mesh = _CTX.mesh
+    if rules is None:
+        rules = _CTX.rules or DEFAULT_RULES
+    if mesh is None:
+        return P()
+    taken: set[str] = set()
+    parts = []
+    for i, name in enumerate(logical_axes):
+        dim = None if shape is None else shape[i]
+        axes = _resolve_axes(name, mesh, rules, dim, taken)
+        if axes is not None:
+            taken.update(axes)
+            parts.append(axes if len(axes) > 1 else axes[0])
+        else:
+            parts.append(None)
+    # strip trailing Nones for a tidy spec
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def shard_act(x: jax.Array, logical_axes: Sequence[str | None]) -> jax.Array:
+    """Apply a logical sharding constraint to an activation (no-op w/o mesh)."""
+    mesh, rules = _CTX.mesh, _CTX.rules
+    if mesh is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        raise ValueError(
+            f"shard_act: {len(logical_axes)} logical axes for rank-{x.ndim} array"
+        )
+    spec = logical_to_spec(logical_axes, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(
+    logical_axes: Sequence[str | None],
+    shape: Sequence[int] | None = None,
+    mesh: Mesh | None = None,
+    rules: AxisRules | None = None,
+) -> NamedSharding:
+    if mesh is None:
+        mesh = _CTX.mesh
+    if mesh is None:
+        raise ValueError("named_sharding requires a mesh")
+    return NamedSharding(mesh, logical_to_spec(logical_axes, shape, mesh, rules))
+
+
+def param_shardings(
+    logical_tree: Any,
+    shape_tree: Any,
+    mesh: Mesh,
+    rules: AxisRules | None = None,
+) -> Any:
+    """Build a NamedSharding pytree for params.
+
+    ``logical_tree`` mirrors the param pytree with tuples of logical axis names
+    as leaves; ``shape_tree`` holds ShapeDtypeStructs (from ``jax.eval_shape``).
+    """
+    return jax.tree.map(
+        lambda axes, s: named_sharding(axes, s.shape, mesh, rules),
+        logical_tree,
+        shape_tree,
+        is_leaf=lambda t: isinstance(t, tuple) and all(isinstance(a, (str, type(None))) for a in t),
+    )

@@ -1,0 +1,4 @@
+from repro.serve.engine import make_decode_step, make_prefill_step, cache_axes
+from repro.serve.sampler import sample
+
+__all__ = ["make_decode_step", "make_prefill_step", "cache_axes", "sample"]

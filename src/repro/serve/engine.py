@@ -1,0 +1,75 @@
+"""Serving step factories + cache sharding axes.
+
+``serve_step`` semantics for the dry-run cells: ``decode_*`` / ``long_*``
+lower one new token against a KV cache of ``seq_len`` (assignment spec);
+``prefill_*`` lowers the full-prompt cache-fill.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import get_model
+from repro.models.hooks import Collector, NULL_COLLECTOR
+
+# cache leaf name -> logical axes (by trailing dims; leading "layers" handled
+# by rank: stacked leaves carry one extra leading dim)
+_CACHE_AXES: dict[str, tuple[str | None, ...]] = {
+    "k": ("batch", "kv_time", "kv_heads_act", "head_dim_act"),
+    "v": ("batch", "kv_time", "kv_heads_act", "head_dim_act"),
+    "ck": ("batch", "kv_time", "kv_heads_act", "head_dim_act"),
+    "cv": ("batch", "kv_time", "kv_heads_act", "head_dim_act"),
+    "ckv": ("batch", "kv_time", "kv_lora_act"),
+    "kpe": ("batch", "kv_time", "head_dim_act"),
+    "wkv": ("batch", "heads_act", "state", "state"),
+    "x_prev": ("batch", "embed_act"),
+    "conv": ("batch", "conv", "mlp_act"),
+    "h": ("batch", "mlp_act"),
+}
+
+
+def cache_axes(cache: Any) -> Any:
+    """Mirror a cache pytree with logical-axes tuples derived from leaf names."""
+
+    def leaf_axes(path, leaf):
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = p.key
+                break
+        axes = _CACHE_AXES[name]
+        extra = leaf.ndim - len(axes)
+        assert extra >= 0, (name, leaf.shape)
+        return ("layers",) * extra + axes
+
+    return jax.tree_util.tree_map_with_path(leaf_axes, cache)
+
+
+def make_prefill_step(cfg: ModelConfig, collector: Collector = NULL_COLLECTOR) -> Callable:
+    model = get_model(cfg)
+
+    def prefill_step(params, batch, cache):
+        return model.prefill(cfg, params, batch, cache, collector)
+
+    return prefill_step
+
+
+def make_decode_step(
+    cfg: ModelConfig,
+    collector: Collector = NULL_COLLECTOR,
+    *,
+    temperature: float = 0.0,
+) -> Callable:
+    model = get_model(cfg)
+    from repro.serve.sampler import sample
+
+    def decode_step(params, cache, tokens, pos):
+        cache, logits = model.decode_step(cfg, params, cache, tokens, pos, collector)
+        next_tok = sample(logits, temperature=temperature)
+        return cache, logits, next_tok
+
+    return decode_step

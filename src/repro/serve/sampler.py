@@ -1,0 +1,23 @@
+"""Token sampling: greedy / temperature / top-k."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(
+    logits: jax.Array,  # [B, V]
+    key: jax.Array | None = None,
+    *,
+    temperature: float = 0.0,
+    top_k: int = 0,
+) -> jax.Array:
+    if temperature <= 0.0 or key is None:
+        return jnp.argmax(logits, axis=-1)
+    logits = logits / temperature
+    if top_k > 0:
+        vals, idx = jax.lax.top_k(logits, top_k)
+        choice = jax.random.categorical(key, vals)
+        return jnp.take_along_axis(idx, choice[:, None], axis=-1)[:, 0]
+    return jax.random.categorical(key, logits)

@@ -1,0 +1,89 @@
+"""End-to-end training driver: data pipeline + jitted train step + async
+checkpointing + MegaScan tracing + optional MegaScope probes + failover.
+
+Used by examples/train_lm.py and the fault-tolerance tests; the same loop
+drives the multi-pod configuration (the jit step is mesh-agnostic — shardings
+come from the installed axis rules).
+"""
+
+from __future__ import annotations
+
+import logging
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer, latest_step, restore
+from repro.configs.base import ModelConfig
+from repro.core.tracing.tracer import Tracer
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.models.hooks import NULL_COLLECTOR
+from repro.train.optim import OptimizerConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+log = logging.getLogger("repro.train")
+
+
+@dataclass
+class LoopConfig:
+    n_steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: str | None = None
+    seed: int = 0
+    grad_accum: int = 1
+
+
+def train(
+    cfg: ModelConfig,
+    ocfg: OptimizerConfig,
+    data_cfg: DataConfig,
+    loop: LoopConfig,
+    *,
+    collector=NULL_COLLECTOR,
+    tracer: Tracer | None = None,
+    state=None,
+) -> tuple[Any, list[dict]]:
+    tracer = tracer or Tracer(0, enabled=False)
+    ds = SyntheticTokens(data_cfg)
+    if state is None:
+        with tracer.scope("init", op="init"):
+            state = init_train_state(cfg, jax.random.PRNGKey(loop.seed))
+
+    step_fn = jax.jit(
+        make_train_step(cfg, ocfg, grad_accum=loop.grad_accum, collector=collector),
+        donate_argnums=0,
+    )
+
+    start = 0
+    ckpt = None
+    if loop.ckpt_dir:
+        ckpt = Checkpointer(loop.ckpt_dir)
+        last = latest_step(loop.ckpt_dir)
+        if last is not None:
+            state, _ = restore(loop.ckpt_dir, state)
+            start = last
+            log.info("restored checkpoint at step %d", start)
+
+    history: list[dict] = []
+    t0 = time.perf_counter()
+    for step in range(start, loop.n_steps):
+        batch = ds.batch_at(step)
+        with tracer.scope("train_step", op="train_step", mb=step):
+            state, metrics = step_fn(state, batch)
+        if (step + 1) % loop.log_every == 0 or step == loop.n_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()
+                 if hasattr(v, "ndim") and v.ndim == 0}
+            m["step"] = step + 1
+            m["wall_s"] = round(time.perf_counter() - t0, 2)
+            history.append(m)
+            log.info("step %d: loss=%.4f lr=%.2e", step + 1,
+                     m.get("loss", float("nan")), m.get("lr", 0.0))
+        if ckpt and (step + 1) % loop.ckpt_every == 0:
+            ckpt.save_async(state, step + 1, metadata={"arch": cfg.name})
+    if ckpt:
+        ckpt.wait()
+    return state, history

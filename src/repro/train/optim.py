@@ -1,0 +1,110 @@
+"""Optimizer: AdamW with warmup-cosine and WSD (warmup-stable-decay, MiniCPM)
+schedules, global-norm clipping, decay masking — raw JAX, fully sharded state.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Literal
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    min_lr_frac: float = 0.1
+    betas: tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    schedule: Literal["cosine", "wsd", "constant"] = "cosine"
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    wsd_decay_frac: float = 0.1  # final fraction of steps spent decaying
+
+
+def schedule_lr(ocfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(ocfg.warmup_steps, 1), 1.0)
+    if ocfg.schedule == "constant":
+        frac = jnp.ones(())
+    elif ocfg.schedule == "cosine":
+        t = jnp.clip(
+            (s - ocfg.warmup_steps) / max(ocfg.total_steps - ocfg.warmup_steps, 1),
+            0.0, 1.0,
+        )
+        frac = ocfg.min_lr_frac + (1 - ocfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    elif ocfg.schedule == "wsd":
+        # warmup -> stable plateau -> exponential-ish linear decay tail
+        decay_steps = int(ocfg.total_steps * ocfg.wsd_decay_frac)
+        decay_start = ocfg.total_steps - decay_steps
+        t = jnp.clip((s - decay_start) / max(decay_steps, 1), 0.0, 1.0)
+        frac = 1.0 - (1.0 - ocfg.min_lr_frac) * t
+    else:
+        raise ValueError(ocfg.schedule)
+    return ocfg.lr * warm * frac
+
+
+def _decay_mask(params: Any) -> Any:
+    """Weight decay applies only to rank>=2 tensors (not norms/biases)."""
+    return jax.tree.map(lambda p: float(p.ndim >= 2), params)
+
+
+def init_opt_state(master: Any) -> dict:
+    zeros = lambda: jax.tree.map(jnp.zeros_like, master)
+    return {"m": zeros(), "v": zeros(), "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(
+    ocfg: OptimizerConfig,
+    grads: Any,  # fp32, same tree as master
+    master: Any,  # fp32 master params
+    opt: dict,
+) -> tuple[Any, dict, dict]:
+    """Returns (new_master, new_opt_state, stats)."""
+    step = opt["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, ocfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    b1, b2 = ocfg.betas
+    lr = schedule_lr(ocfg, step)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    mask = _decay_mask(master)
+
+    def upd(g, p, m, v, wd):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + ocfg.eps) + ocfg.weight_decay * wd * p
+        return p - lr * delta, m, v
+
+    flat, treedef = jax.tree.flatten(master)
+    gflat = jax.tree.leaves(grads)
+    mflat = jax.tree.leaves(opt["m"])
+    vflat = jax.tree.leaves(opt["v"])
+    wdflat = jax.tree.leaves(mask)
+    new_p, new_m, new_v = [], [], []
+    for g, p, m, v, wd in zip(gflat, flat, mflat, vflat, wdflat):
+        pn, mn, vn = upd(g, p, m, v, wd)
+        new_p.append(pn)
+        new_m.append(mn)
+        new_v.append(vn)
+    stats = {"grad_norm": gnorm, "lr": lr}
+    return (
+        jax.tree.unflatten(treedef, new_p),
+        {"m": jax.tree.unflatten(treedef, new_m),
+         "v": jax.tree.unflatten(treedef, new_v),
+         "step": step},
+        stats,
+    )

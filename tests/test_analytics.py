@@ -1,0 +1,55 @@
+"""MegaScan trace analytics (the Perfetto-SQL equivalent queries)."""
+
+import numpy as np
+
+from repro.core.simkit.engine import FaultModel
+from repro.core.simkit.workload import ModelProfile, Topology
+from repro.core.tracing import ClockModel, simulate_trace
+from repro.core.tracing.analytics import (
+    bandwidth_by_edge,
+    iteration_breakdown,
+    slow_ops,
+    to_table,
+    utilization_by_rank,
+)
+
+TOPO = Topology(dp=1, pp=4, tp=1)
+
+
+def _table(faults=None):
+    events, _ = simulate_trace(
+        TOPO, ModelProfile(), n_micro=6, faults=faults, clocks=ClockModel(seed=0)
+    )
+    return to_table(events)
+
+
+def test_bandwidth_query_flags_degraded_edge():
+    t = _table(FaultModel(link_slowdown={(1, 2): 0.25, (2, 1): 0.25}))
+    bw = bandwidth_by_edge(t)
+    assert bw, "pipeline must have p2p edges"
+    med = np.median([v["median_bps"] for v in bw.values()])
+    bad = {e for e, v in bw.items() if v["median_bps"] < med / 2}
+    assert any(set(e) == {1, 2} for e in bad), bad
+
+
+def test_utilization_accounts_all_ranks():
+    t = _table()
+    util = utilization_by_rank(t)
+    assert set(util) == set(range(TOPO.world))
+    for v in util.values():
+        assert 0 <= v["compute_frac"] <= 1
+        assert abs(v["compute_frac"] + v["comm_frac"] + v["idle_frac"] - 1.0) < 1e-6
+
+
+def test_slow_ops_surfaces_downclocked_rank():
+    t = _table(FaultModel(compute_slowdown={2: 0.5}))
+    rows = slow_ops(t, ratio=1.5)
+    assert rows and all(r["rank"] == 2 for r in rows[:4])
+
+
+def test_iteration_breakdown_covers_phases():
+    t = _table()
+    br = iteration_breakdown(t)
+    assert br["compute_F"] > 0 and br["compute_B"] > 0
+    assert br["compute_B"] > br["compute_F"]  # bwd ~2x fwd in the profile
+    assert br["p2p"] > 0

@@ -1,0 +1,152 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle, swept
+over shapes and dtypes, plus hypothesis property tests on invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.rglru.kernel import rglru_pallas
+from repro.kernels.rglru.ref import rglru_ref
+from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.wkv6.kernel import wkv6_pallas
+from repro.kernels.wkv6.ref import wkv6_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# --------------------------------------------------------------- rmsnorm ---
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(2, 7, 128), (1, 64, 512), (33, 256)])
+def test_rmsnorm_kernel(shape, dtype):
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), shape, dtype)
+    s = jax.random.normal(jax.random.fold_in(KEY, 2), shape[-1:], jnp.float32)
+    out = rmsnorm_pallas(x, s, interpret=True)
+    ref = rmsnorm_ref(x, s)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=tol, atol=tol
+    )
+
+
+# ----------------------------------------------------------- flash attn ----
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,S,H,K,D,causal,window",
+    [
+        (2, 128, 4, 2, 64, True, None),
+        (1, 96, 4, 4, 32, True, None),       # pad path (96 % 64 != 0)
+        (2, 64, 8, 1, 64, True, 32),         # MQA + window
+        (1, 128, 2, 2, 128, False, None),    # bidirectional
+    ],
+)
+def test_flash_attention_kernel(B, S, H, K, D, causal, window, dtype):
+    q = jax.random.normal(jax.random.fold_in(KEY, 3), (B, S, H, D), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 4), (B, S, K, D), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 5), (B, S, K, D), dtype)
+    kw = dict(scale=D ** -0.5, causal=causal, window=window)
+    out = flash_attention(q, k, v, block_q=64, block_k=64,
+                          impl="pallas_interpret", **kw)
+    ref = flash_attention(q, k, v, impl="xla", **kw)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=tol, atol=tol
+    )
+
+
+# ------------------------------------------------------------------ wkv6 ---
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("BH,T,Kd,Vd,chunk", [(4, 64, 16, 16, 16), (2, 96, 32, 32, 32)])
+def test_wkv6_kernel(BH, T, Kd, Vd, chunk, dtype):
+    ks = jax.random.split(jax.random.fold_in(KEY, 6), 5)
+    r = jax.random.normal(ks[0], (BH, T, Kd), dtype)
+    k = jax.random.normal(ks[1], (BH, T, Kd), dtype)
+    v = jax.random.normal(ks[2], (BH, T, Vd), dtype)
+    # moderate decay (clamp region not hit): w in [exp(-1.5), exp(-0.01)]
+    w = jnp.exp(-jnp.exp(jax.random.uniform(ks[3], (BH, T, Kd), minval=-4.0, maxval=0.4))).astype(dtype)
+    u = jax.random.normal(ks[4], (BH, Kd), jnp.float32)
+    y, s = wkv6_pallas(r, k, v, w, u, chunk=chunk, interpret=True)
+    y_ref, s_ref = wkv6_ref(r, k, v, w, u)
+    tol = 2e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(y_ref, np.float32), rtol=tol, atol=tol
+    )
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), rtol=tol, atol=tol)
+
+
+def test_wkv6_extreme_decay_exact():
+    """The kernel's per-channel decay form is exact even under brutal decay
+    (exponents <= 0: underflow only)."""
+    ks = jax.random.split(jax.random.fold_in(KEY, 7), 5)
+    BH, T, Kd = 2, 64, 16
+    r = jax.random.normal(ks[0], (BH, T, Kd))
+    k = jax.random.normal(ks[1], (BH, T, Kd))
+    v = jax.random.normal(ks[2], (BH, T, Kd))
+    w = jnp.full((BH, T, Kd), 1e-4)  # brutal decay
+    u = jax.random.normal(ks[4], (BH, Kd))
+    y, s = wkv6_pallas(r, k, v, w, u, chunk=16, interpret=True)
+    y_ref, s_ref = wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------------- rglru ---
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,T,W,chunk", [(2, 64, 128, 16), (1, 96, 512, 32)])
+def test_rglru_kernel(B, T, W, chunk, dtype):
+    ks = jax.random.split(jax.random.fold_in(KEY, 8), 2)
+    a = jax.random.uniform(ks[0], (B, T, W), minval=0.2, maxval=0.999).astype(dtype)
+    b = jax.random.normal(ks[1], (B, T, W), dtype)
+    y, s = rglru_pallas(a, b, chunk=chunk, interpret=True)
+    y_ref, s_ref = rglru_ref(a, b)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(y_ref, np.float32), rtol=tol, atol=tol
+    )
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), rtol=tol, atol=tol)
+
+
+# --------------------------------------------------- property invariants ---
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), t_blocks=st.integers(1, 4))
+def test_rglru_chunking_invariance(seed, t_blocks):
+    """The chunked kernel must be invariant to the chunk size."""
+    key = jax.random.PRNGKey(seed)
+    B, W = 1, 128
+    T = 16 * t_blocks * 2
+    a = jax.random.uniform(key, (B, T, W), minval=0.3, maxval=0.99)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (B, T, W))
+    y1, s1 = rglru_pallas(a, b, chunk=16, interpret=True)
+    y2, s2 = rglru_pallas(a, b, chunk=16 * t_blocks, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_flash_attention_softmax_rows_boundedness(seed):
+    """Attention outputs are convex combinations of V rows: bounded by the
+    extremes of V (softmax weights sum to 1)."""
+    key = jax.random.PRNGKey(seed)
+    B, S, H, K, D = 1, 64, 2, 2, 32
+    q = jax.random.normal(key, (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, K, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, K, D))
+    out = flash_attention(q, k, v, scale=D ** -0.5, causal=True,
+                          block_q=32, block_k=32, impl="pallas_interpret")
+    vmax = float(np.abs(np.asarray(v)).max())
+    assert float(np.abs(np.asarray(out)).max()) <= vmax + 1e-4

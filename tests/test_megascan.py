@@ -1,0 +1,141 @@
+"""MegaScan: tracer, chrome export, dependency reconstruction, clock
+alignment, and 3-stage straggler detection (paper §3.2)."""
+
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.simkit.engine import FaultModel
+from repro.core.simkit.workload import ModelProfile, Topology
+from repro.core.tracing import (
+    ClockModel,
+    Tracer,
+    align_clocks,
+    apply_alignment,
+    detect,
+    from_chrome,
+    gather_traces,
+    reconstruct_collectives,
+    simulate_trace,
+    to_chrome,
+)
+
+TOPO = Topology(dp=2, pp=2, tp=2)
+PROF = ModelProfile(fwd_time=1e-3, bwd_time=2e-3)
+
+
+def _trace(faults=None, clocks=None, n_iters=2, topo=TOPO):
+    return simulate_trace(
+        topo, PROF, n_micro=4, n_iters=n_iters,
+        faults=faults, clocks=clocks or ClockModel(seed=3),
+    )
+
+
+# ---------------------------------------------------------------- tracer ---
+
+
+def test_tracer_scope_and_gather():
+    tr0, tr1 = Tracer(0), Tracer(1)
+    with tr0.scope("fwd", mb=0, op="fwd"):
+        time.sleep(0.002)
+    with tr1.scope("allreduce", kind="coll", group=(0, 1), bytes=1024):
+        time.sleep(0.001)
+    merged = gather_traces([tr0, tr1])
+    assert len(merged) == 2
+    assert merged[0].dur >= 0.002
+    assert any(e.kind == "coll" and e.args["group"] == (0, 1) for e in merged)
+
+
+def test_tracer_disabled_is_zero_cost_path():
+    tr = Tracer(0, enabled=False)
+    with tr.scope("x"):
+        pass
+    assert tr.events == []
+
+
+def test_chrome_roundtrip():
+    events, _ = _trace()
+    doc = to_chrome(events)
+    json.dumps(doc)  # valid JSON
+    assert any(e["ph"] == "M" for e in doc["traceEvents"])  # process names
+    back = from_chrome(doc)
+    assert len(back) == len(events)
+    e0, b0 = events[0], back[0]
+    assert abs(e0.ts - b0.ts) < 1e-9 and e0.rank == b0.rank
+
+
+# --------------------------------------------- dependency reconstruction ---
+
+
+def test_collective_matching_complete():
+    events, _ = _trace(n_iters=1)
+    instances = reconstruct_collectives(events)
+    assert instances
+    for inst in instances:
+        assert set(inst.members) == set(inst.key[0])  # all participants found
+    # every coll event got a related_sync_op annotation
+    for e in events:
+        if e.kind == "coll":
+            assert "related_sync_op" in e.args
+
+
+# ----------------------------------------------------------- alignment ----
+
+
+def test_clock_alignment_recovers_offsets():
+    clocks = ClockModel(offset_sigma=20e-3, drift_sigma=1e-4, read_noise=1e-6, seed=7)
+    events, truth = _trace(clocks=clocks)
+    aligned = apply_alignment(events, align_clocks(events))
+    # after alignment, matched collective instances end nearly simultaneously
+    insts = reconstruct_collectives(aligned)
+    spreads = [
+        max(i.ends.values()) - min(i.ends.values()) for i in insts if len(i.members) > 1
+    ]
+    assert np.median(spreads) < 5e-4, np.median(spreads)
+    # and raw (unaligned) spreads are much worse
+    raw = [
+        max(i.ends.values()) - min(i.ends.values())
+        for i in reconstruct_collectives(events) if len(i.members) > 1
+    ]
+    assert np.median(raw) > 5 * np.median(spreads)
+
+
+# ----------------------------------------------------------- detection ----
+
+
+def test_detects_downclocked_rank():
+    faults = FaultModel(compute_slowdown={5: 0.5})  # rank 5 at half speed
+    events, truth = _trace(faults=faults)
+    aligned = apply_alignment(events, align_clocks(events))
+    diag = detect(aligned, TOPO)
+    assert diag.slow_ranks == [5], diag.summary()
+
+
+def test_no_false_positive_on_healthy_run():
+    events, _ = _trace(faults=FaultModel(jitter=0.02, seed=11))
+    aligned = apply_alignment(events, align_clocks(events))
+    diag = detect(aligned, TOPO)
+    assert diag.slow_ranks == [], diag.summary()
+
+
+def test_detects_degraded_link():
+    topo = Topology(dp=1, pp=4, tp=1)
+    faults = FaultModel(link_slowdown={(1, 2): 0.25, (2, 1): 0.25})
+    events, _ = simulate_trace(topo, PROF, n_micro=6, faults=faults,
+                               clocks=ClockModel(seed=5))
+    diag = detect(events, topo)
+    flat = {tuple(sorted(l)) for l in diag.degraded_links}
+    assert (1, 2) in flat, diag.summary()
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_detection_precision_recall_across_seeds(seed):
+    rng = np.random.default_rng(seed)
+    bad = int(rng.integers(0, TOPO.world))
+    faults = FaultModel(compute_slowdown={bad: 0.55}, jitter=0.01, seed=seed)
+    events, _ = _trace(faults=faults, clocks=ClockModel(seed=seed))
+    aligned = apply_alignment(events, align_clocks(events))
+    diag = detect(aligned, TOPO)
+    assert diag.slow_ranks == [bad], (bad, diag.summary())

@@ -1,0 +1,160 @@
+"""MegaScope: probe capture + compression, perturbation injection, PCA,
+generation records, dashboard artifact, and zero-overhead-when-off."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.scope import (
+    PerturbSpec,
+    ProbeSpec,
+    ScopeCollector,
+    generate_with_scope,
+    pca_fit,
+    pca_project,
+    write_dashboard,
+)
+from repro.core.scope.collector import _bitflip
+from repro.core.scope.compress import histogram, stats_of, subsample
+from repro.models import get_model, make_batch
+from repro.models import lm as lm_mod
+
+
+@pytest.fixture(scope="module")
+def qwen_smoke():
+    cfg = get_config("qwen2-0.5b", smoke=True)
+    params = get_model(cfg).init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+# ------------------------------------------------------------- compress ---
+
+
+def test_stats_match_numpy():
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, 16))
+    s = stats_of(x)
+    xn = np.asarray(x)
+    assert np.isclose(float(s["mean"]), xn.mean(), atol=1e-6)
+    assert np.isclose(float(s["max"]), xn.max(), atol=1e-6)
+    assert np.isclose(float(s["l2"]), np.linalg.norm(xn), rtol=1e-5)
+
+
+def test_histogram_counts_total():
+    x = jax.random.normal(jax.random.PRNGKey(1), (100,))
+    h = histogram(x, bins=16)
+    assert int(h["hist"].sum()) == 100
+
+
+def test_subsample_bounded():
+    x = jnp.ones((64, 256))
+    s = subsample(x, k=16)
+    assert s.shape[0] <= 16 and s.shape[1] <= 16
+
+
+# --------------------------------------------------------------- capture ---
+
+
+def test_capture_through_scanned_layers(qwen_smoke):
+    cfg, params = qwen_smoke
+    scope = ScopeCollector(probes=[ProbeSpec("mlp_hidden", "stats"),
+                                   ProbeSpec("att_resid", "stats")])
+    batch = make_batch(cfg, 2, 32, jax.random.PRNGKey(1))
+    _, metrics = jax.jit(
+        lambda p, b: lm_mod.loss_fn(cfg, p, b, scope)
+    )(params, batch)
+    caps = metrics["captures"]["seg0"]
+    assert "mlp_hidden.stats" in caps
+    # stacked over layers
+    assert caps["mlp_hidden.stats"]["mean"].shape == (cfg.num_layers,)
+    assert np.all(np.isfinite(np.asarray(caps["mlp_hidden.stats"]["l2"])))
+
+
+def test_no_probes_means_no_capture_aux(qwen_smoke):
+    cfg, params = qwen_smoke
+    batch = make_batch(cfg, 2, 32, jax.random.PRNGKey(1))
+    _, metrics = jax.jit(lambda p, b: lm_mod.loss_fn(cfg, p, b))(params, batch)
+    assert "captures" not in metrics
+
+
+# -------------------------------------------------------------- perturb ----
+
+
+def test_gaussian_perturbation_changes_loss(qwen_smoke):
+    cfg, params = qwen_smoke
+    batch = make_batch(cfg, 2, 32, jax.random.PRNGKey(2))
+    loss0, _ = lm_mod.loss_fn(cfg, params, batch)
+    scope = ScopeCollector(
+        perturbs=[PerturbSpec("att_resid", "gaussian", amount=0.5)]
+    )
+    loss1, _ = lm_mod.loss_fn(cfg, params, batch, scope)
+    assert not np.isclose(float(loss0), float(loss1))
+
+
+def test_layer_targeted_offset_perturbs_single_layer(qwen_smoke):
+    cfg, params = qwen_smoke
+    batch = make_batch(cfg, 2, 32, jax.random.PRNGKey(3))
+    loss0, _ = lm_mod.loss_fn(cfg, params, batch)
+    one = ScopeCollector(perturbs=[PerturbSpec("ffn_resid", "offset", 1.0, layer=0)])
+    none = ScopeCollector(perturbs=[PerturbSpec("ffn_resid", "offset", 1.0, layer=99)])
+    loss_one, _ = lm_mod.loss_fn(cfg, params, batch, one)
+    loss_none, _ = lm_mod.loss_fn(cfg, params, batch, none)
+    assert abs(float(loss_one) - float(loss0)) > 1e-4   # hit layer -> effect
+    assert np.isclose(float(loss_none), float(loss0), atol=1e-6)  # miss -> none
+
+
+def test_bitflip_expected_rate():
+    x = jnp.zeros((64, 64), jnp.float32)
+    y = _bitflip(x, 0.01, jax.random.PRNGKey(0))
+    bits = np.asarray(
+        jax.lax.bitcast_convert_type(y, jnp.uint32)
+    )
+    n_flipped = np.unpackbits(bits.view(np.uint8)).sum()
+    expect = 64 * 64 * 32 * 0.01
+    assert 0.5 * expect < n_flipped < 1.5 * expect
+
+
+def test_bitflip_zero_prob_identity():
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 8))
+    y = _bitflip(x, 0.0, jax.random.PRNGKey(2))
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ------------------------------------------------------------------ pca ----
+
+
+def test_pca_recovers_planted_direction():
+    rng = np.random.default_rng(0)
+    d = rng.normal(size=(64,))
+    d /= np.linalg.norm(d)
+    x = rng.normal(size=(200, 1)) * 5 @ d[None, :] + rng.normal(size=(200, 64)) * 0.1
+    fit = pca_fit(x, k=2)
+    cos = abs(fit["components"][0] @ d)
+    assert cos > 0.98
+    proj = pca_project(x, fit)
+    assert proj.shape == (200, 2)
+
+
+# ----------------------------------------------------------- generation ----
+
+
+def test_generation_records_and_dashboard(tmp_path, qwen_smoke):
+    cfg, params = qwen_smoke
+    prompt = jax.random.randint(jax.random.PRNGKey(5), (1, 8), 0, cfg.vocab_size)
+    scope = ScopeCollector(probes=[ProbeSpec("final_hidden", "stats")])
+    records, toks = generate_with_scope(cfg, params, prompt, n_steps=4, scope=scope)
+    assert len(records) == 4 and toks.shape == (1, 4)
+    for r in records:
+        assert 0 <= r.prob <= 1
+        assert len(r.topk_tokens) == 8
+        assert abs(sum(r.topk_probs)) <= 1.001
+    out = write_dashboard(
+        tmp_path / "dash.html", records,
+        attention=np.eye(8), pca_points=np.random.default_rng(0).normal(size=(8, 2)),
+        meta="qwen2-0.5b-smoke",
+    )
+    html = out.read_text()
+    assert "MegaScope dashboard" in html and "DATA" in html
+    assert len(html) > 2000
