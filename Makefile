@@ -1,0 +1,19 @@
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export PYTHONPATH
+
+.PHONY: test ci bench-serve deps deps-dev
+
+# tier-1 verification
+test:
+	python -m pytest -x -q
+
+ci: test
+
+bench-serve:
+	python benchmarks/serve_bench.py --smoke
+
+deps:
+	pip install -r requirements.txt
+
+deps-dev:
+	pip install -r requirements-dev.txt

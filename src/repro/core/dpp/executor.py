@@ -24,6 +24,17 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.dpp.schedule import Step
 
+# jax moved shard_map out of experimental (and renamed check_rep -> check_vma)
+# around 0.5/0.6; support both so the executor runs on the pinned 0.4.x too.
+try:
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+
+    _SHARD_MAP_KW = {"check_vma": False}
+except ImportError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _SHARD_MAP_KW = {"check_rep": False}
+
 
 @dataclass
 class TimeTable:
@@ -169,13 +180,11 @@ def pipeline_apply(
         out = jnp.where(sid == 0, out, jnp.zeros_like(out))
         return jax.lax.psum(out, axis)
 
-    from jax import shard_map
-
-    fn = shard_map(
+    fn = _shard_map(
         body, mesh=mesh,
         in_specs=(P(axis), P()),
         out_specs=P(),
-        check_vma=False,
+        **_SHARD_MAP_KW,
     )
     return fn(params, x_micro)
 

@@ -1,12 +1,23 @@
-"""Task-graph builder for one 3-D-parallel (DP x PP x TP) training iteration.
+"""Task-graph builders for the discrete-event engine.
 
-The pipeline traversal order is pluggable — MegaDPP's scheduler emits the
-(model_chunk, microbatch) visit order per rank (DFC / BFC / 1F1B / custom) and
-this module lowers it into engine tasks: stage compute (with per-layer TP
-collectives folded in), inter-stage P2P sends/recvs, and the DP gradient
-all-reduce after the last backward.
+Training: one 3-D-parallel (DP x PP x TP) iteration.  The pipeline traversal
+order is pluggable — MegaDPP's scheduler emits the (model_chunk, microbatch)
+visit order per rank (DFC / BFC / 1F1B / custom) and this module lowers it
+into engine tasks: stage compute (with per-layer TP collectives folded in),
+inter-stage P2P sends/recvs, and the DP gradient all-reduce after the last
+backward.  Rank layout follows Megatron order:
+rank = dp * (PP*TP) + pp * TP + tp.
 
-Rank layout follows Megatron order: rank = dp * (PP*TP) + pp * TP + tp.
+Serving: ``serving_workload`` lowers a MegaServe request trace (Poisson
+arrivals, mixed lengths) under a batching policy — "continuous" (slot
+admission + immediate refill; an idealized pool-less model of
+``repro.serve.scheduler`` that admits into every free slot per tick and
+never preempts) or "static" (length-bucketed lockstep batches, mirroring
+``repro.serve.server.StaticRunner``) — into engine tasks, so scheduler
+policies can be evaluated offline without touching jax.
+Request ``i``'s arrival is modeled as a duration-``arrival`` task on virtual
+rank ``1 + i``; serving compute lives on rank 0 and every admission depends
+on the matching arrival task.
 """
 
 from __future__ import annotations
@@ -262,3 +273,167 @@ def build_training_step(
                         meta={"phase": "G"},
                     ))
     return order
+
+
+# ---------------------------------------------------------------------------
+# MegaServe: offline serving-policy evaluation
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RequestSpec:
+    rid: int
+    arrival: float          # seconds
+    prompt_len: int
+    max_new: int
+
+
+@dataclass(frozen=True)
+class ServeProfile:
+    """Serving cost model (seconds)."""
+
+    prefill_time_per_token: float = 50e-6
+    decode_step_base: float = 2e-3       # fixed cost of one engine step
+    decode_step_per_seq: float = 0.2e-3  # marginal cost per active slot
+
+
+def poisson_requests(
+    n: int,
+    rate: float,
+    *,
+    prompt_lens: Sequence[int] = (16, 32, 64, 128, 256),
+    max_new_range: tuple[int, int] = (4, 48),
+    seed: int = 0,
+) -> list[RequestSpec]:
+    """Poisson arrivals at ``rate``/s with mixed prompt/generation lengths;
+    ``max_new_range`` is inclusive on both ends."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out = []
+    for i in range(n):
+        t += float(rng.exponential(1.0 / rate))
+        out.append(RequestSpec(
+            rid=i,
+            arrival=t,
+            prompt_len=int(rng.choice(prompt_lens)),
+            max_new=int(rng.integers(*max_new_range, endpoint=True)),
+        ))
+    return out
+
+
+def serving_workload(
+    requests: Sequence[RequestSpec],
+    *,
+    policy: str = "continuous",
+    num_slots: int = 4,
+    batch_size: int | None = None,
+    prof: ServeProfile = ServeProfile(),
+) -> dict[int, list[Task]]:
+    """Lower a request trace under a batching policy to engine task lists.
+
+    The policy decisions (admission order, batch formation) are simulated
+    here against ``prof``; the engine then reproduces the timeline from the
+    emitted dependency structure, so altering link/fault models or profiles
+    re-times the same policy.  Decode tasks carry ``meta={"tokens": k}`` =
+    useful tokens emitted that step; sum them for throughput.
+    """
+    arrive = {
+        r.rid: Task(
+            tid=f"arrive_r{r.rid}", rank=1 + i, duration=r.arrival,
+            kind="compute", meta={"phase": "arrive", "rid": r.rid},
+        )
+        for i, r in enumerate(requests)
+    }
+    serve: list[Task] = []
+    reqs = sorted(requests, key=lambda r: (r.arrival, r.rid))
+
+    if policy == "continuous":
+        now = 0.0
+        waiting = list(reqs)
+        slots: dict[int, list] = {}      # slot -> [rid, remaining]
+        step = 0
+        while waiting or slots:
+            if not slots and waiting and waiting[0].arrival > now:
+                now = waiting[0].arrival
+            free = [s for s in range(num_slots) if s not in slots]
+            for s in free:
+                nxt = next((r for r in waiting if r.arrival <= now), None)
+                if nxt is None:
+                    break
+                waiting.remove(nxt)
+                dur = nxt.prompt_len * prof.prefill_time_per_token
+                serve.append(Task(
+                    tid=f"prefill_r{nxt.rid}", rank=0, duration=dur,
+                    kind="compute", deps=(f"arrive_r{nxt.rid}",),
+                    meta={"phase": "prefill", "rid": nxt.rid, "tokens": 1},
+                ))
+                now = max(now, nxt.arrival) + dur
+                # prefill emits the first token; remaining decode budget:
+                slots[s] = [nxt.rid, nxt.max_new - 1]
+                if slots[s][1] <= 0:
+                    del slots[s]
+            if slots:
+                active = len(slots)
+                dur = prof.decode_step_base + active * prof.decode_step_per_seq
+                serve.append(Task(
+                    tid=f"dec{step}", rank=0, duration=dur, kind="compute",
+                    meta={"phase": "decode", "active": active, "tokens": active},
+                ))
+                now += dur
+                for s in list(slots):
+                    slots[s][1] -= 1
+                    if slots[s][1] <= 0:
+                        del slots[s]
+            step += 1
+    elif policy == "static":
+        # mirrors server.StaticRunner: length-bucketed batches (one prompt
+        # length per batch, so no padding cost), buckets processed in
+        # ascending length, batch members in arrival order, launch gated on
+        # the last member's arrival, lockstep to the slowest budget
+        B = batch_size or num_slots
+        buckets: dict[int, list[RequestSpec]] = {}
+        for r in reqs:
+            buckets.setdefault(r.prompt_len, []).append(r)
+        b = 0
+        for plen in sorted(buckets):
+            group = buckets[plen]
+            for bi in range(0, len(group), B):
+                members = group[bi : bi + B]
+                steps = max(r.max_new for r in members)
+                serve.append(Task(
+                    tid=f"prefill_b{b}", rank=0,
+                    duration=len(members) * plen * prof.prefill_time_per_token,
+                    kind="compute",
+                    deps=tuple(f"arrive_r{r.rid}" for r in members),
+                    meta={"phase": "prefill", "batch": b,
+                          "tokens": len(members)},
+                ))
+                for s in range(steps - 1):
+                    useful = sum(1 for r in members if r.max_new - 1 > s)
+                    serve.append(Task(
+                        tid=f"dec_b{b}_s{s}", rank=0,
+                        duration=prof.decode_step_base
+                        + len(members) * prof.decode_step_per_seq,
+                        kind="compute",
+                        meta={"phase": "decode", "active": len(members),
+                              "tokens": useful},
+                    ))
+                b += 1
+    else:
+        raise ValueError(f"unknown serving policy {policy!r}")
+
+    return {0: serve, **{t.rank: [t] for t in arrive.values()}}
+
+
+def serving_throughput(result) -> dict:
+    """Aggregate tokens/s + makespan from a ``serving_workload`` run."""
+    tokens = sum(
+        r.meta.get("tokens", 0) for r in result.records if r.rank == 0
+    )
+    return {
+        "tokens": tokens,
+        "makespan": result.makespan,
+        "tokens_per_s": tokens / result.makespan if result.makespan else 0.0,
+    }

@@ -1,8 +1,15 @@
-"""Batched serving launcher: prefill a batch of prompts, decode with batched
-steps, optional MegaScope probes per token.
+"""Serving launcher.
+
+Static lockstep batch (the original path):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
         --batch 4 --prompt-len 32 --max-new 16
+
+MegaServe continuous batching (paged KV cache + request scheduler) over a
+mixed-length Poisson-arrival workload:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
+        --continuous --requests 16 --rate 100 --slots 4 --max-new 16
 """
 
 from __future__ import annotations
@@ -22,6 +29,37 @@ from repro.serve.engine import make_decode_step, make_prefill_step
 from repro.serve.sampler import sample
 
 
+def _run_continuous(cfg, args) -> None:
+    from repro.serve import MegaServe
+    from repro.serve.server import make_poisson_workload
+
+    m = get_model(cfg)
+    params = m.init(cfg, jax.random.PRNGKey(0))
+    specs, prompts, serve_cfg = make_poisson_workload(
+        cfg,
+        n=args.requests, rate=args.rate,
+        prompt_lens=tuple(int(x) for x in args.prompt_lens.split(",")),
+        max_new_range=(max(1, args.max_new // 4), args.max_new),
+        num_slots=args.slots, block_size=args.block_size,
+        num_blocks=args.num_blocks, seed=args.seed,
+    )
+    srv = MegaServe(cfg, params, serve_cfg)
+    for s in specs:
+        srv.submit(prompts[s.rid], s.max_new, arrival=s.arrival)
+    outs = srv.drain()
+    met = srv.metrics()
+    print(f"arch={cfg.name} continuous slots={args.slots} "
+          f"blocks={serve_cfg.num_blocks}x{serve_cfg.block_size} "
+          f"requests={len(specs)}")
+    for k in ("generated_tokens", "wall_s", "tokens_per_s", "ttft_p50_s",
+              "ttft_p99_s", "latency_p50_s", "latency_p99_s", "preemptions",
+              "steps"):
+        v = met[k]
+        print(f"  {k:15s} {v:.4f}" if isinstance(v, float) else f"  {k:15s} {v}")
+    for rid in list(outs)[:2]:
+        print(f"  req {rid}: {outs[rid][:12]}...")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -30,9 +68,31 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    # MegaServe continuous batching
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching via MegaServe (paged KV cache)")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=100.0,
+                    help="Poisson arrival rate, requests/s")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="physical KV blocks (0 = size for zero preemption)")
+    ap.add_argument("--prompt-lens", default="16,32,64,128,256")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    if args.continuous:
+        if cfg.input_kind != "tokens":
+            raise SystemExit(f"{cfg.name}: continuous serving needs token archs")
+        if args.temperature != 0.0:
+            raise SystemExit(
+                "--continuous decodes greedily (preemption-by-recompute "
+                "requires deterministic decode); drop --temperature"
+            )
+        _run_continuous(cfg, args)
+        return
     if cfg.input_kind != "tokens" and cfg.family != "encdec":
         raise SystemExit(f"{cfg.name} needs a modality frontend; serve tokens archs")
     m = get_model(cfg)

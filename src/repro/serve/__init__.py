@@ -1,4 +1,39 @@
-from repro.serve.engine import make_decode_step, make_prefill_step, cache_axes
+from repro.serve.engine import (
+    cache_axes,
+    make_decode_step,
+    make_prefill_step,
+    make_slot_decode_step,
+    make_slot_prefill,
+)
+from repro.serve.paged_cache import (
+    BlockAllocator,
+    PagedKVCache,
+    PoolExhausted,
+    PoolSpec,
+    blocks_for,
+)
+from repro.serve.request import Request, RequestStatus, aggregate_metrics
 from repro.serve.sampler import sample
+from repro.serve.scheduler import Scheduler, ServeConfig
+from repro.serve.server import MegaServe, run_static
 
-__all__ = ["make_decode_step", "make_prefill_step", "cache_axes", "sample"]
+__all__ = [
+    "BlockAllocator",
+    "MegaServe",
+    "PagedKVCache",
+    "PoolExhausted",
+    "PoolSpec",
+    "Request",
+    "RequestStatus",
+    "Scheduler",
+    "ServeConfig",
+    "aggregate_metrics",
+    "blocks_for",
+    "cache_axes",
+    "make_decode_step",
+    "make_prefill_step",
+    "make_slot_decode_step",
+    "make_slot_prefill",
+    "run_static",
+    "sample",
+]

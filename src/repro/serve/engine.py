@@ -73,3 +73,72 @@ def make_decode_step(
         return cache, logits, next_tok
 
     return decode_step
+
+
+# ---------------------------------------------------------------------------
+# MegaServe continuous-batching steps (per-slot positions)
+# ---------------------------------------------------------------------------
+#
+# The static decode step above shares one scalar ``pos`` across the batch —
+# fine when every slot decodes in lockstep, useless for continuous batching
+# where each slot sits at its own length.  These factories vmap a B=1 decode
+# over the slot axis so every lane carries its own cache position, without
+# touching the model code.  Cache leaves follow the ``lm.init_cache`` layout
+# ``[n_layers, batch, ...]`` (batch axis 1), hence ``in_axes=1``.
+
+
+def make_slot_decode_step(cfg: ModelConfig, collector: Collector = NULL_COLLECTOR) -> Callable:
+    """Returns ``step(params, dense_cache, tokens [S], pos [S]) ->
+    (dense_cache, logits [S, V], captures)`` with per-slot positions.
+
+    ``dense_cache`` is the gathered paged view (see ``paged_cache.gather``);
+    captures come out of ``lm.forward``'s aux so MegaScope probes yield
+    per-slot records (stacked over the slot axis by vmap).
+    """
+    if cfg.input_kind != "tokens":
+        raise ValueError(f"{cfg.name}: continuous batching serves token archs")
+    from repro.models import layers as L
+    from repro.models import lm
+
+    def one(params, cache_s, tok, pos):
+        cache_b = jax.tree.map(lambda a: a[:, None], cache_s)  # batch=1 back
+        hidden, new_cache, aux = lm.forward(
+            cfg, params, {"tokens": tok[None, None]},
+            cache=cache_b, cache_pos=pos, collector=collector,
+        )
+        logits = L.logits_fn(params, cfg, hidden)[0, 0]
+        new_cache = jax.tree.map(lambda a: a[:, 0], new_cache)
+        return new_cache, logits, aux.get("captures", {})
+
+    def step(params, cache, tokens, pos):
+        return jax.vmap(one, in_axes=(None, 1, 0, 0), out_axes=(1, 0, 0))(
+            params, cache, tokens, pos
+        )
+
+    return step
+
+
+def make_slot_prefill(cfg: ModelConfig, collector: Collector = NULL_COLLECTOR) -> Callable:
+    """Returns ``prefill(params, tokens [1, P], cache_len) ->
+    (filled_cache, last_logits [V], captures)``.
+
+    The prompt runs at its exact length (recurrent-state families integrate
+    every position, so right-padding would corrupt rwkv/griffin state); only
+    the cache is rounded up to a block multiple by the caller via
+    ``cache_len``.
+    """
+    if cfg.input_kind != "tokens":
+        raise ValueError(f"{cfg.name}: continuous batching serves token archs")
+    from repro.models import layers as L
+    from repro.models import lm
+
+    def prefill(params, tokens, cache_len: int):
+        cache = lm.init_cache(cfg, 1, cache_len)
+        hidden, new_cache, aux = lm.forward(
+            cfg, params, {"tokens": tokens},
+            cache=cache, cache_pos=jnp.int32(0), collector=collector,
+        )
+        logits = L.logits_fn(params, cfg, hidden[:, -1:, :])[0, 0]
+        return new_cache, logits, aux.get("captures", {})
+
+    return prefill

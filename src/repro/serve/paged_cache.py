@@ -1,0 +1,206 @@
+"""Paged KV cache: a fixed-size physical block pool + per-slot block tables.
+
+The static serving path allocates one dense ``[B, cache_len, ...]`` cache, so
+every slot pays for the longest sequence it might ever hold.  Here the time
+axis of each attention cache leaf is cut into fixed-size blocks that live in
+one shared physical pool; a slot owns an ordered *block table* of pool
+indices, and slots with wildly different lengths share the pool densely.
+
+Layout convention (matches ``lm.init_cache``): every cache leaf is stacked
+over layers exactly once, i.e. shaped ``[n_layers, batch, ...]``.  Leaves
+whose post-batch axis is the full-length ``kv_time`` axis (k/v, ckv/kpe,
+griffin window k/v) are *paged*:
+
+    dense leaf  [n, B, L_max, *feat]   ->   pool [n, num_blocks, bs, *feat]
+
+All other leaves (rwkv wkv/x_prev, griffin conv/h — O(1) recurrent state per
+slot, nothing to page) are *slot-state* leaves stored densely per slot:
+
+    state leaf  [n, B, *feat]          ->   pool [n, num_slots, *feat]
+
+Block 0 is reserved as the *null block*: padding entries of every block table
+point at it, so the decode-path scatter of inactive slots lands there
+harmlessly and gathered positions beyond a slot's ``kv_len`` are masked out
+by attention anyway.
+
+The decode path is gather -> step -> scatter-touched-block: one decode step
+writes a single position per slot, so only the block containing that position
+goes back to the pool.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.serve.engine import cache_axes
+
+
+class PoolExhausted(RuntimeError):
+    """No free physical blocks — the scheduler should preempt."""
+
+
+class BlockAllocator:
+    """Free-list allocator over ``num_blocks`` fixed-size physical blocks.
+
+    Block ids ``[reserved, num_blocks)`` are allocatable; ``[0, reserved)``
+    (the null block) never leave the allocator.
+    """
+
+    def __init__(self, num_blocks: int, reserved: int = 1):
+        if num_blocks <= reserved:
+            raise ValueError(f"need > {reserved} blocks, got {num_blocks}")
+        self.num_blocks = num_blocks
+        self.reserved = reserved
+        # LIFO free list: recently-freed blocks are reused first (warm)
+        self._free: list[int] = list(range(num_blocks - 1, reserved - 1, -1))
+        self._held: set[int] = set()
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_held(self) -> int:
+        return len(self._held)
+
+    def alloc(self, n: int = 1) -> list[int]:
+        if n > len(self._free):
+            raise PoolExhausted(f"want {n} blocks, {len(self._free)} free")
+        out = [self._free.pop() for _ in range(n)]
+        self._held.update(out)
+        return out
+
+    def try_alloc(self, n: int = 1) -> list[int] | None:
+        if n > len(self._free):
+            return None
+        return self.alloc(n)
+
+    def free(self, blocks: list[int]) -> None:
+        for b in blocks:
+            if b not in self._held:
+                raise ValueError(f"block {b} not held (double free?)")
+            self._held.remove(b)
+            self._free.append(b)
+
+
+def blocks_for(n_tokens: int, block_size: int) -> int:
+    """Blocks needed to hold ``n_tokens`` cache positions."""
+    return -(-n_tokens // block_size)
+
+
+@dataclass(frozen=True)
+class PoolSpec:
+    num_slots: int
+    num_blocks: int          # physical blocks incl. the reserved null block
+    block_size: int
+    max_blocks: int          # block-table width per slot
+
+    @property
+    def max_len(self) -> int:
+        return self.max_blocks * self.block_size
+
+
+class PagedKVCache:
+    """The physical pool pytree + pure gather/scatter transforms.
+
+    ``self.pool`` mirrors the model's cache treedef; methods are pure in the
+    pool (take + return it) so the server can fold them into jitted steps.
+    """
+
+    def __init__(self, cfg: ModelConfig, spec: PoolSpec):
+        self.cfg = cfg
+        self.spec = spec
+        L = spec.max_len
+        template = jax.eval_shape(lambda: lm.init_cache(cfg, 1, L))
+        axes = cache_axes(template)
+
+        def is_paged(leaf, ax) -> bool:
+            # ax comes from cache_axes with the "layers" prefix included
+            n_layers = sum(1 for a in ax if a == "layers")
+            assert n_layers == 1 and ax[1] == "batch", (
+                f"expected [layers, batch, ...], got {leaf.shape} axes {ax}"
+            )
+            if "kv_time" not in ax:
+                return False
+            return leaf.shape[ax.index("kv_time")] == L
+
+        self.paged = jax.tree.map(is_paged, template, axes)
+
+        def make_pool(leaf, paged):
+            n = leaf.shape[0]
+            feat = leaf.shape[3:] if paged else leaf.shape[2:]
+            if paged:
+                shape = (n, spec.num_blocks, spec.block_size, *feat)
+            else:
+                shape = (n, spec.num_slots, *feat)
+            return jnp.zeros(shape, leaf.dtype)
+
+        self.pool = jax.tree.map(make_pool, template, self.paged)
+
+    # ------------------------------------------------------------ gather
+    def gather(self, pool: Any, tables: jax.Array) -> Any:
+        """Materialize the dense decode cache for all slots.
+
+        ``tables`` [num_slots, max_blocks] int32 — padding entries must point
+        at the null block.  Paged leaves become ``[n, S, max_len, *feat]``;
+        slot-state leaves pass through (they already carry the slot axis).
+        """
+        S, M = tables.shape
+        bs = self.spec.block_size
+
+        def leaf(p, paged):
+            if not paged:
+                return p
+            n = p.shape[0]
+            g = jnp.take(p, tables.reshape(-1), axis=1)       # [n, S*M, bs, f]
+            return g.reshape(n, S, M * bs, *p.shape[3:])
+
+        return jax.tree.map(leaf, pool, self.paged)
+
+    # ------------------------------------------------- scatter (decode)
+    def scatter_decode(
+        self, pool: Any, dense: Any, tables: jax.Array, pos: jax.Array
+    ) -> Any:
+        """Write back the one block each slot touched at ``pos`` (per-slot
+        write position of this decode step); slot-state leaves are replaced
+        wholesale since the dense tree *is* their storage."""
+        S = tables.shape[0]
+        bs = self.spec.block_size
+        tb = pos // bs                                         # [S]
+        phys = tables[jnp.arange(S), tb]                       # [S]
+
+        def leaf(p, d, paged):
+            if not paged:
+                return d
+
+            def pick(d_s, start):                              # d_s [n, L, f]
+                return jax.lax.dynamic_slice_in_dim(d_s, start, bs, axis=1)
+
+            blocks = jax.vmap(pick, in_axes=(1, 0), out_axes=1)(d, tb * bs)
+            return p.at[:, phys].set(blocks)                   # [n, S, bs, f]
+
+        return jax.tree.map(leaf, pool, dense, self.paged)
+
+    # ------------------------------------------------ scatter (prefill)
+    def scatter_prefill(
+        self, pool: Any, filled: Any, slot: jax.Array, phys: jax.Array
+    ) -> Any:
+        """Deposit a freshly-prefilled B=1 dense cache (cache_len = a block
+        multiple) into ``phys`` [n_blk] pool blocks + slot-state row ``slot``."""
+        bs = self.spec.block_size
+        n_blk = phys.shape[0]
+
+        def leaf(p, f, paged):
+            if not paged:
+                return p.at[:, slot].set(f[:, 0])
+            n = p.shape[0]
+            r = f[:, 0].reshape(n, n_blk, bs, *p.shape[3:])
+            return p.at[:, phys].set(r)
+
+        return jax.tree.map(leaf, pool, filled, self.paged)

@@ -1,0 +1,205 @@
+"""Continuous-batching scheduler: admission, eviction, preemption-by-recompute.
+
+Pure host-side bookkeeping (numpy block tables, python free list) deliberately
+split from the jax engine: the policy is exercised directly by unit tests and
+mirrored by ``core.simkit.workload.serving_workload`` for offline evaluation
+on the discrete-event engine.
+
+Invariants:
+  * every active slot holds exactly ``ceil(pos / block_size)`` physical
+    blocks, except transiently inside ``ensure_capacity`` which grows it to
+    cover the next write position;
+  * block-table padding entries point at the reserved null block 0;
+  * preemption frees *all* of a victim's blocks and requeues it at the head
+    of the waiting line with its generated tokens folded into the prompt —
+    greedy decode recomputes to the identical continuation.
+
+Policy knobs: admission is FIFO over arrived requests; capacity priority is
+oldest-admitted-first; the preemption victim is the youngest-admitted active
+slot (LIFO, so the request closest to done keeps running).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.serve.paged_cache import BlockAllocator, blocks_for
+from repro.serve.request import Request, RequestStatus
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    num_slots: int = 4
+    block_size: int = 16
+    num_blocks: int = 65           # physical blocks incl. the reserved null
+    max_blocks_per_slot: int = 16  # block-table width; max_len = this * bs
+    max_prefills_per_step: int = 1 # prefill/decode interleaving bound
+
+    @property
+    def max_len(self) -> int:
+        return self.max_blocks_per_slot * self.block_size
+
+    @property
+    def usable_blocks(self) -> int:
+        return self.num_blocks - 1
+
+
+@dataclass
+class Admission:
+    slot: int
+    rid: int
+    tokens: list[int]              # prompt to prefill (recompute incl.)
+    phys: list[int]                # freshly-allocated physical blocks
+    is_recompute: bool
+
+
+class Scheduler:
+    def __init__(self, cfg: ServeConfig):
+        self.cfg = cfg
+        self.allocator = BlockAllocator(cfg.num_blocks, reserved=1)
+        self.requests: dict[int, Request] = {}
+        self.waiting: list[int] = []
+        S, M = cfg.num_slots, cfg.max_blocks_per_slot
+        self.slots: list[int | None] = [None] * S
+        self.blocks: list[list[int]] = [[] for _ in range(S)]
+        self.pos: list[int] = [0] * S
+        self.last_tok: list[int] = [0] * S
+        self.tables = np.zeros((S, M), np.int32)
+        self._admit_seq = [0] * S
+        self._seq = 0
+
+    # ------------------------------------------------------------- intake
+    def submit(self, req: Request) -> None:
+        worst = blocks_for(req.prompt_len + req.max_new, self.cfg.block_size)
+        if worst > min(self.cfg.usable_blocks, self.cfg.max_blocks_per_slot):
+            raise ValueError(
+                f"request {req.rid}: needs {worst} blocks, pool/slot caps are "
+                f"{self.cfg.usable_blocks}/{self.cfg.max_blocks_per_slot}"
+            )
+        if req.rid in self.requests:
+            raise ValueError(f"duplicate rid {req.rid}")
+        self.requests[req.rid] = req
+        self.waiting.append(req.rid)
+
+    # ---------------------------------------------------------- admission
+    def admit(self, now: float) -> list[Admission]:
+        """FIFO-admit arrived requests into free slots while blocks last,
+        bounded by ``max_prefills_per_step``."""
+        out: list[Admission] = []
+        while len(out) < self.cfg.max_prefills_per_step:
+            slot = next((s for s, r in enumerate(self.slots) if r is None), None)
+            if slot is None:
+                break
+            rid = next(
+                (r for r in self.waiting if self.requests[r].arrival <= now), None
+            )
+            if rid is None:
+                break
+            req = self.requests[rid]
+            tokens = req.recompute_prompt
+            phys = self.allocator.try_alloc(blocks_for(len(tokens), self.cfg.block_size))
+            if phys is None:
+                break
+            self.waiting.remove(rid)
+            self.slots[slot] = rid
+            self.blocks[slot] = list(phys)
+            self.pos[slot] = len(tokens)
+            self.tables[slot, :] = 0
+            self.tables[slot, : len(phys)] = phys
+            self._seq += 1
+            self._admit_seq[slot] = self._seq
+            req.status = RequestStatus.RUNNING
+            if req.t_admitted is None:
+                req.t_admitted = now
+            out.append(Admission(slot, rid, tokens, list(phys),
+                                 is_recompute=req.n_preemptions > 0))
+        return out
+
+    # ----------------------------------------------------------- capacity
+    def ensure_capacity(self) -> list[int]:
+        """Grow each active slot's block table to cover its next write
+        position, preempting youngest-admitted slots when the pool runs dry.
+        Returns the rids preempted this call."""
+        preempted: list[int] = []
+        for slot in sorted(self.active_slots(), key=lambda s: self._admit_seq[s]):
+            if self.slots[slot] is None:       # victim of an earlier preempt
+                continue
+            while len(self.blocks[slot]) < self.pos[slot] // self.cfg.block_size + 1:
+                got = self.allocator.try_alloc(1)
+                if got is not None:
+                    b = got[0]
+                    self.tables[slot, len(self.blocks[slot])] = b
+                    self.blocks[slot].append(b)
+                    continue
+                # LIFO victim: the youngest-admitted active slot — possibly
+                # the growing slot itself, which then waits its turn back
+                # in the queue rather than stealing from an older request
+                victims = [
+                    s for s in self.active_slots() if self.slots[s] is not None
+                ]
+                victim = max(victims, key=lambda s: self._admit_seq[s])
+                preempted.append(self.preempt(victim))
+                if victim == slot:
+                    break
+        return preempted
+
+    def preempt(self, slot: int) -> int:
+        rid = self.slots[slot]
+        assert rid is not None
+        req = self.requests[rid]
+        req.status = RequestStatus.WAITING
+        req.n_preemptions += 1
+        self._release(slot)
+        self.waiting.insert(0, rid)
+        return rid
+
+    # ------------------------------------------------------------- decode
+    def active_slots(self) -> list[int]:
+        return [s for s, r in enumerate(self.slots) if r is not None]
+
+    def record_token(self, slot: int, tok: int, now: float) -> None:
+        """Append one generated token for the request in ``slot``."""
+        rid = self.slots[slot]
+        assert rid is not None
+        req = self.requests[rid]
+        req.generated.append(tok)
+        if req.t_first_token is None:
+            req.t_first_token = now
+        self.last_tok[slot] = tok
+
+    def advance(self, slot: int) -> None:
+        """One decode step wrote K/V at ``pos``; move the write cursor."""
+        self.pos[slot] += 1
+
+    def evict_finished(self, now: float) -> list[int]:
+        out = []
+        for slot in self.active_slots():
+            req = self.requests[self.slots[slot]]
+            if req.done:
+                req.status = RequestStatus.FINISHED
+                req.t_finished = now
+                out.append(req.rid)
+                self._release(slot)
+        return out
+
+    def _release(self, slot: int) -> None:
+        self.allocator.free(self.blocks[slot])
+        self.blocks[slot] = []
+        self.slots[slot] = None
+        self.pos[slot] = 0
+        self.last_tok[slot] = 0
+        self.tables[slot, :] = 0
+
+    # -------------------------------------------------------------- state
+    @property
+    def all_done(self) -> bool:
+        return not self.waiting and not self.active_slots() and all(
+            r.status is RequestStatus.FINISHED for r in self.requests.values()
+        )
+
+    def next_arrival(self) -> float | None:
+        if not self.waiting:
+            return None
+        return min(self.requests[r].arrival for r in self.waiting)

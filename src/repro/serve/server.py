@@ -1,0 +1,414 @@
+"""MegaServe front-end: ``submit() / step() / drain()`` over the paged engine.
+
+One ``step()`` is one scheduler tick: admit + prefill newly-arrived requests,
+grow block tables (preempting if the pool is dry), run one fused decode step
+for every active slot, evict finished slots so their space refills next tick.
+
+Observability is first-class, mirroring the four-module philosophy:
+
+* every prefill / decode step is bracketed by a MegaScan ``Tracer`` scope, so
+  serving timelines flow through the same ``TraceEvent`` pipeline (chrome
+  export, analytics, straggler detection) as training traces;
+* an optional MegaScope ``ScopeCollector`` threads through the model; probe
+  captures surface per-slot (the vmapped decode stacks them over the slot
+  axis) and are attached to each request's stream records.
+
+The static-batch baseline (`run_static`) drives the pre-existing lockstep
+path for benchmarking and equivalence tests.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.tracing.tracer import Tracer
+from repro.models import get_model
+from repro.models.hooks import Collector, NULL_COLLECTOR
+from repro.serve.engine import (
+    make_decode_step,
+    make_prefill_step,
+    make_slot_decode_step,
+    make_slot_prefill,
+)
+from repro.serve.paged_cache import PagedKVCache, PoolSpec, blocks_for
+from repro.serve.request import Request, RequestStatus, aggregate_metrics
+from repro.serve.sampler import sample
+from repro.serve.scheduler import Scheduler, ServeConfig
+
+
+@dataclass
+class StreamItem:
+    """One generated token of one request, with optional probe captures.
+
+    Capture shapes differ by phase: the admission item's captures come from
+    the B=1 prefill over the whole prompt (leaves keep their batch=1/time
+    axes), later items are per-slot slices of the vmapped single-token
+    decode.  Consumers should branch on which phase an item came from (the
+    admission item is the first of a stream / of a recompute segment).
+    """
+    step: int
+    token: int
+    captures: dict = field(default_factory=dict)
+
+
+class MegaServe:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Any,
+        serve_cfg: ServeConfig = ServeConfig(),
+        *,
+        collector: Collector = NULL_COLLECTOR,
+        tracer: Tracer | None = None,
+        clock: Callable[[], float] | None = None,
+        use_jit: bool = True,
+    ):
+        self.cfg = cfg
+        self.serve_cfg = serve_cfg
+        self.params = params
+        self.sched = Scheduler(serve_cfg)
+        self.kv = PagedKVCache(cfg, PoolSpec(
+            num_slots=serve_cfg.num_slots,
+            num_blocks=serve_cfg.num_blocks,
+            block_size=serve_cfg.block_size,
+            max_blocks=serve_cfg.max_blocks_per_slot,
+        ))
+        # take ownership of the pool buffers; keeping them referenced from
+        # self.kv too would pin a second full KV pool in device memory
+        self.pool, self.kv.pool = self.kv.pool, None
+        self.tracer = tracer or Tracer(rank=0, enabled=True)
+        self.collector = collector
+        self._capture = collector is not NULL_COLLECTOR
+        self.streams: dict[int, list[StreamItem]] = {}
+        self.step_idx = 0
+        self._next_rid = 0
+        # offset-based clock: t=0 at construction (or last reset()), for
+        # injected clocks too, so reset() re-times warmed-up runs correctly
+        self._raw_clock = clock or time.perf_counter
+        self._base = self._raw_clock()
+        self._clock = lambda: self._raw_clock() - self._base
+
+        slot_step = make_slot_decode_step(cfg, collector)
+
+        def decode_fn(params, pool, tables, tokens, pos):
+            dense = self.kv.gather(pool, tables)
+            new_dense, logits, caps = slot_step(params, dense, tokens, pos)
+            pool = self.kv.scatter_decode(pool, new_dense, tables, pos)
+            return pool, jnp.argmax(logits, -1), caps
+
+        self._decode = jax.jit(decode_fn) if use_jit else decode_fn
+        self._slot_prefill = make_slot_prefill(cfg, collector)
+        self._prefill_cache: dict[int, Callable] = {}
+        self._use_jit = use_jit
+
+    # -------------------------------------------------------------- intake
+    def submit(
+        self,
+        prompt: list[int],
+        max_new: int,
+        *,
+        arrival: float | None = None,
+        eos_id: int | None = None,
+    ) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(
+            rid=rid, prompt=list(prompt), max_new=max_new,
+            arrival=self._clock() if arrival is None else arrival,
+            eos_id=eos_id,
+        )
+        self.sched.submit(req)
+        self.streams[rid] = []
+        return rid
+
+    # ------------------------------------------------------------ prefill
+    def _prefill_for(self, n_tokens: int) -> Callable:
+        fn = self._prefill_cache.get(n_tokens)
+        if fn is not None:
+            return fn
+        bs = self.serve_cfg.block_size
+        cache_len = blocks_for(n_tokens, bs) * bs
+
+        def prefill_fn(params, tokens, pool, slot, phys):
+            filled, logits, caps = self._slot_prefill(params, tokens, cache_len)
+            pool = self.kv.scatter_prefill(pool, filled, slot, phys)
+            return pool, jnp.argmax(logits, -1), caps
+
+        fn = jax.jit(prefill_fn) if self._use_jit else prefill_fn
+        self._prefill_cache[n_tokens] = fn
+        return fn
+
+    # --------------------------------------------------------------- step
+    def step(self) -> dict:
+        """One scheduler tick; returns what happened for observability."""
+        now = self._clock()
+        admitted, tokens_out = [], 0
+
+        for adm in self.sched.admit(now):
+            req = self.sched.requests[adm.rid]
+            fn = self._prefill_for(len(adm.tokens))
+            tokens = jnp.asarray(adm.tokens, jnp.int32)[None, :]
+            phys = jnp.asarray(adm.phys, jnp.int32)
+            with self.tracer.scope(
+                "prefill", kind="compute", rid=adm.rid, slot=adm.slot,
+                tokens=len(adm.tokens), recompute=adm.is_recompute,
+                step=self.step_idx,
+            ):
+                self.pool, tok, caps = fn(
+                    self.params, tokens, self.pool, adm.slot, phys
+                )
+                tok = jax.block_until_ready(tok)
+            now = self._clock()
+            self._emit(adm.slot, int(tok), caps, slot_axis=False)
+            self.sched.record_token(adm.slot, int(tok), now)
+            admitted.append(adm.rid)
+            tokens_out += 1
+
+        # a prefill token can complete a request (max_new=1, or eos emitted
+        # right away): evict before decode or the slot runs one step past
+        # its budget and buries the eos
+        finished = self.sched.evict_finished(now)
+        preempted = self.sched.ensure_capacity()
+        active = self.sched.active_slots()
+        if active:
+            toks = jnp.asarray(self.sched.last_tok, jnp.int32)
+            pos = jnp.asarray(self.sched.pos, jnp.int32)
+            tables = jnp.asarray(self.sched.tables)
+            with self.tracer.scope(
+                "decode", kind="compute", step=self.step_idx,
+                active=len(active), tokens=len(active),
+            ):
+                self.pool, next_tok, caps = self._decode(
+                    self.params, self.pool, tables, toks, pos
+                )
+                next_tok = jax.block_until_ready(next_tok)
+            now = self._clock()
+            next_tok = np.asarray(next_tok)
+            for s in active:
+                self.sched.advance(s)
+                self._emit(s, int(next_tok[s]), caps, slot_axis=True)
+                self.sched.record_token(s, int(next_tok[s]), now)
+                tokens_out += 1
+
+        finished += self.sched.evict_finished(now)
+        if admitted or active:
+            self.step_idx += 1  # idle ticks don't count as engine steps
+        return {
+            "admitted": admitted,
+            "preempted": preempted,
+            "finished": finished,
+            "active": len(active),
+            "tokens": tokens_out,
+        }
+
+    def _emit(self, slot: int, tok: int, caps: Any, *, slot_axis: bool) -> None:
+        rid = self.sched.slots[slot]
+        captures = {}
+        if self._capture and caps:
+            take = (lambda a: np.asarray(a[slot])) if slot_axis else np.asarray
+            captures = jax.tree.map(take, caps)
+        self.streams[rid].append(StreamItem(self.step_idx, tok, captures))
+
+    # -------------------------------------------------------------- drain
+    def drain(self, max_steps: int = 100_000) -> dict[int, list[int]]:
+        """Run until every submitted request finishes; returns token streams.
+
+        ``max_steps`` bounds productive engine steps and (separately) idle
+        ticks spent waiting for future arrivals; with an injected clock that
+        never reaches the next arrival this raises instead of spinning."""
+        work = idle = 0
+        while not self.sched.all_done:
+            out = self.step()
+            if out["admitted"] or out["active"]:
+                work += 1
+                idle = 0
+                if work > max_steps:
+                    raise RuntimeError(f"drain: not done after {work} steps")
+                continue
+            idle += 1
+            if idle > max_steps:
+                raise RuntimeError(
+                    f"drain: stalled waiting for arrival at "
+                    f"t={self.sched.next_arrival()} (now={self._clock():.3f})"
+                )
+            nxt = self.sched.next_arrival()
+            if nxt is not None:
+                # real sleep is harmless for injected clocks too: either the
+                # clock advances elsewhere or the idle guard above fires
+                time.sleep(max(0.0, min(nxt - self._clock(), 1e-3)))
+        return {rid: [it.token for it in s] for rid, s in self.streams.items()}
+
+    # ------------------------------------------------------------ metrics
+    def metrics(self) -> dict:
+        reqs = list(self.sched.requests.values())
+        return {
+            **aggregate_metrics(reqs, wall=self._clock()),
+            "steps": self.step_idx,
+        }
+
+    def trace_events(self):
+        return self.tracer.events
+
+    def reset(self) -> None:
+        """Drop finished requests/streams/traces and restart the clock —
+        lets a warmed-up server (compiled steps) time a fresh workload."""
+        if not self.sched.all_done:
+            raise RuntimeError("reset() with requests still in flight")
+        self.sched.requests.clear()
+        self.streams.clear()
+        self.tracer.clear()
+        self.step_idx = 0
+        self._base = self._raw_clock()
+
+
+# ---------------------------------------------------------------------------
+# Static-batch baseline (the pre-existing lockstep path)
+# ---------------------------------------------------------------------------
+
+
+class StaticRunner:
+    """Length-bucketed static batching: requests sharing one prompt length
+    batch together in arrival order (the static prefill/decode steps require
+    a single prompt length and one shared position), the whole batch decodes
+    in lockstep to the slowest member's budget, and a batch only launches
+    once its last member has arrived.  Holds its jitted steps so repeat runs
+    (benchmark warmup) reuse compilations."""
+
+    def __init__(self, cfg: ModelConfig, params: Any):
+        self.cfg = cfg
+        self.params = params
+        self.model = get_model(cfg)
+        self.prefill = jax.jit(make_prefill_step(cfg))
+        self.decode = jax.jit(make_decode_step(cfg))
+
+    def run(
+        self,
+        requests: list[tuple[list[int], int, float]],  # (prompt, max_new, arrival)
+        *,
+        batch_size: int,
+        tracer: Tracer | None = None,
+        clock: Callable[[], float] | None = None,
+    ) -> tuple[dict[int, list[int]], dict]:
+        """Returns (rid -> tokens, metrics); rids index ``requests``."""
+        cfg, params = self.cfg, self.params
+        tracer = tracer or Tracer(rank=0, enabled=True)
+        t0 = time.perf_counter()
+        clock = clock or (lambda: time.perf_counter() - t0)
+        model, prefill, decode = self.model, self.prefill, self.decode
+
+        reqs = [Request(rid=i, prompt=list(p), max_new=m, arrival=a)
+                for i, (p, m, a) in enumerate(requests)]
+        buckets: dict[int, list[Request]] = {}
+        for r in reqs:
+            buckets.setdefault(r.prompt_len, []).append(r)
+
+        outputs: dict[int, list[int]] = {}
+        for P in sorted(buckets):
+            group = buckets[P]
+            for i in range(0, len(group), batch_size):
+                members = group[i : i + batch_size]
+                B = len(members)
+                steps = max(r.max_new for r in members)
+                launch = max(r.arrival for r in members)
+                stalls = 0
+                while clock() < launch:
+                    before = clock()
+                    time.sleep(min(launch - before, 1e-3))
+                    # injected clocks may be simulated: bail out instead of
+                    # spinning forever if time never advances (~10 s real)
+                    stalls = stalls + 1 if clock() <= before else 0
+                    if stalls > 10_000:
+                        raise RuntimeError(
+                            f"static: stalled waiting for batch launch at "
+                            f"t={launch} (now={clock():.3f})"
+                        )
+                cache = model.init_cache(cfg, B, P + steps)
+                prompts = jnp.asarray([r.prompt for r in members], jnp.int32)
+                with tracer.scope("prefill", kind="compute", tokens=B * P, batch=B):
+                    cache, logits = prefill(params, {"tokens": prompts}, cache)
+                    jax.block_until_ready(logits)
+                tok = sample(logits, temperature=0.0)
+                now = clock()
+                for b, r in enumerate(members):
+                    r.t_admitted = launch
+                    r.t_first_token = now
+                    r.generated.append(int(tok[b]))
+                    if len(r.generated) == r.max_new:
+                        r.t_finished = now
+                for s in range(steps - 1):
+                    with tracer.scope("decode", kind="compute", step=s, active=B,
+                                      tokens=B):
+                        cache, logits, tok = decode(params, cache, tok, jnp.int32(P + s))
+                        tok = jax.block_until_ready(tok)
+                    now = clock()
+                    for b, r in enumerate(members):
+                        if len(r.generated) < r.max_new:
+                            r.generated.append(int(tok[b]))
+                            if len(r.generated) == r.max_new:
+                                r.t_finished = now
+                for r in members:
+                    if r.t_finished is None:
+                        r.t_finished = now
+                    r.status = RequestStatus.FINISHED
+                    outputs[r.rid] = list(r.generated)
+
+        metrics = aggregate_metrics(reqs, wall=clock())
+        return outputs, metrics
+
+def run_static(
+    cfg: ModelConfig,
+    params: Any,
+    requests: list[tuple[list[int], int, float]],
+    *,
+    batch_size: int,
+    tracer: Tracer | None = None,
+    clock: Callable[[], float] | None = None,
+) -> tuple[dict[int, list[int]], dict]:
+    """One-shot convenience wrapper over ``StaticRunner``."""
+    return StaticRunner(cfg, params).run(
+        requests, batch_size=batch_size, tracer=tracer, clock=clock
+    )
+
+
+def make_poisson_workload(
+    cfg: ModelConfig,
+    *,
+    n: int,
+    rate: float,
+    prompt_lens: tuple[int, ...],
+    max_new_range: tuple[int, int],
+    num_slots: int,
+    block_size: int = 16,
+    num_blocks: int = 0,
+    seed: int = 0,
+):
+    """Shared CLI workload builder (launcher + benchmark): Poisson arrival
+    specs, random token prompts, and a ``ServeConfig`` sized so the worst
+    request fits one slot — ``num_blocks=0`` sizes the pool for zero
+    preemption (every slot can hold its worst case simultaneously, plus the
+    reserved null block).  Returns (specs, prompts by rid, serve_cfg)."""
+    from repro.core.simkit.workload import poisson_requests
+
+    specs = poisson_requests(
+        n, rate, prompt_lens=prompt_lens, max_new_range=max_new_range,
+        seed=seed,
+    )
+    rng = np.random.default_rng(seed)
+    prompts = {
+        s.rid: rng.integers(2, cfg.vocab_size, size=s.prompt_len).tolist()
+        for s in specs
+    }
+    worst = max(blocks_for(s.prompt_len + s.max_new, block_size) for s in specs)
+    serve_cfg = ServeConfig(
+        num_slots=num_slots, block_size=block_size,
+        num_blocks=num_blocks or (num_slots * worst + 1),
+        max_blocks_per_slot=worst,
+    )
+    return specs, prompts, serve_cfg

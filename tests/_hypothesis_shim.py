@@ -1,0 +1,82 @@
+"""Minimal stand-in for ``hypothesis`` on bare environments.
+
+When the real package is missing, ``@given`` tests run a handful of
+deterministic pseudo-random examples instead of a shrinking search — enough
+to keep the property suites collecting and exercising invariants without the
+dependency.  Supports exactly the strategy surface this repo uses:
+``integers / floats / sampled_from / sets / data``.
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+
+N_EXAMPLES = 5
+
+
+class Strategy:
+    def __init__(self, sample):
+        self.sample = sample
+
+
+def integers(min_value, max_value) -> Strategy:
+    return Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def floats(min_value, max_value) -> Strategy:
+    return Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def sampled_from(xs) -> Strategy:
+    xs = list(xs)
+    return Strategy(lambda r: r.choice(xs))
+
+
+def sets(elem: Strategy, min_size: int = 0, max_size: int = 8) -> Strategy:
+    def sample(r):
+        n = r.randint(min_size, max_size)
+        out: set = set()
+        for _ in range(64):
+            if len(out) >= n:
+                break
+            out.add(elem.sample(r))
+        return out
+
+    return Strategy(sample)
+
+
+class _Data:
+    """Interactive-draw object mirroring ``st.data()``."""
+
+    def __init__(self, r: random.Random):
+        self._r = r
+
+    def draw(self, strat: Strategy, label=None):
+        return strat.sample(self._r)
+
+
+def data() -> Strategy:
+    return Strategy(lambda r: _Data(r))
+
+
+def given(*gargs, **gkwargs):
+    def deco(fn):
+        # no functools.wraps: copying fn's signature would make pytest
+        # treat the strategy parameters as fixtures
+        def wrapper(*args, **kwargs):
+            for i in range(N_EXAMPLES):
+                r = random.Random(0xC0FFEE + i)
+                pos = [s.sample(r) for s in gargs]
+                kw = {k: s.sample(r) for k, s in gkwargs.items()}
+                fn(*args, *pos, **kwargs, **kw)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco
+
+
+def settings(*args, **kwargs):
+    return lambda fn: fn

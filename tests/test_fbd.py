@@ -9,7 +9,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare env: deterministic few-example fallback
+    from _hypothesis_shim import given, settings
+    import _hypothesis_shim as st
 
 from repro.core.fbd.coordinator import (
     BitVectorCoordinator,

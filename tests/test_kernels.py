@@ -3,7 +3,12 @@ over shapes and dtypes, plus hypothesis property tests on invariants."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare env: deterministic few-example fallback
+    from _hypothesis_shim import given, settings
+    import _hypothesis_shim as st
 
 import jax
 import jax.numpy as jnp

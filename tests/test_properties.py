@@ -1,7 +1,13 @@
 """Hypothesis property tests on system invariants (deliverable c)."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare env: deterministic few-example fallback
+    from _hypothesis_shim import given, settings
+    import _hypothesis_shim as st
 
 import jax
 
@@ -74,7 +80,10 @@ def test_logical_spec_axes_never_collide_or_overdivide(data):
     from jax.sharding import AbstractMesh
 
     # abstract mesh: shape-only, no physical devices required
-    mesh = AbstractMesh((2, 2, 2), ("pod", "data", "model"))
+    try:
+        mesh = AbstractMesh((2, 2, 2), ("pod", "data", "model"))
+    except TypeError:  # jax 0.4.x signature: AbstractMesh(((name, size), ...))
+        mesh = AbstractMesh((("pod", 2), ("data", 2), ("model", 2)))
     names = list(DEFAULT_RULES)
     k = data.draw(st.integers(1, 4))
     axes = tuple(data.draw(st.sampled_from(names)) for _ in range(k))

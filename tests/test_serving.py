@@ -1,0 +1,365 @@
+"""MegaServe: block-allocator invariants, paged gather/scatter roundtrips,
+scheduler admission/eviction/preemption on scripted traces, continuous-vs-
+static greedy equivalence, simkit policy evaluation, and trace emission."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.simkit.engine import Engine
+from repro.core.simkit.workload import (
+    RequestSpec,
+    poisson_requests,
+    serving_throughput,
+    serving_workload,
+)
+from repro.core.tracing.chrome import to_chrome
+from repro.models import get_model, lm
+from repro.serve import (
+    BlockAllocator,
+    MegaServe,
+    PagedKVCache,
+    PoolSpec,
+    Request,
+    RequestStatus,
+    Scheduler,
+    ServeConfig,
+    blocks_for,
+)
+from repro.serve.server import StaticRunner
+
+# ------------------------------------------------------------ allocator ---
+
+
+def test_allocator_alloc_free_invariants():
+    a = BlockAllocator(num_blocks=8, reserved=1)
+    assert a.num_free == 7
+    got = a.alloc(3)
+    assert len(set(got)) == 3 and 0 not in got
+    assert a.num_free == 4 and a.num_held == 3
+    a.free(got[:2])
+    assert a.num_free == 6 and a.num_held == 1
+    # LIFO reuse: the most recently freed block comes back first
+    assert a.alloc(1)[0] == got[1]
+
+
+def test_allocator_oom_and_double_free():
+    from repro.serve import PoolExhausted
+
+    a = BlockAllocator(num_blocks=4)
+    got = a.alloc(3)
+    assert a.try_alloc(1) is None
+    with pytest.raises(PoolExhausted):
+        a.alloc(1)
+    a.free([got[0]])
+    with pytest.raises(ValueError):
+        a.free([got[0]])          # double free
+    with pytest.raises(ValueError):
+        a.free([0])               # reserved null block was never handed out
+
+
+def test_blocks_for():
+    assert blocks_for(1, 8) == 1
+    assert blocks_for(8, 8) == 1
+    assert blocks_for(9, 8) == 2
+
+
+# ---------------------------------------------------- paged gather/scatter ---
+
+
+@pytest.fixture(scope="module")
+def qwen_serve():
+    cfg = get_config("qwen2-0.5b", smoke=True).replace(
+        compute_dtype="float32", attn_kv_chunk=4096
+    )
+    params = get_model(cfg).init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_paged_prefill_gather_roundtrip(qwen_serve):
+    cfg, _ = qwen_serve
+    spec = PoolSpec(num_slots=2, num_blocks=9, block_size=8, max_blocks=4)
+    kv = PagedKVCache(cfg, spec)
+    assert any(jax.tree.leaves(kv.paged)), "qwen must have paged k/v leaves"
+
+    # fill a B=1 dense cache (2 blocks worth) with random values
+    template = jax.eval_shape(lambda: lm.init_cache(cfg, 1, 16))
+    key = iter(jax.random.split(jax.random.PRNGKey(1), 64))
+    filled = jax.tree.map(
+        lambda s: jax.random.normal(next(key), s.shape).astype(s.dtype), template
+    )
+    phys = jnp.asarray([3, 5], jnp.int32)
+    pool = kv.scatter_prefill(kv.pool, filled, jnp.int32(1), phys)
+
+    tables = np.zeros((2, 4), np.int32)
+    tables[1, :2] = [3, 5]
+    dense = kv.gather(pool, jnp.asarray(tables))
+
+    flat_d, _ = jax.tree_util.tree_flatten(dense)
+    flat_f, _ = jax.tree_util.tree_flatten(filled)
+    flat_p, _ = jax.tree_util.tree_flatten(kv.paged)
+    for d, f, paged in zip(flat_d, flat_f, flat_p):
+        if paged:  # slot 1, first 16 positions == the filled cache
+            np.testing.assert_array_equal(np.asarray(d[:, 1, :16]),
+                                          np.asarray(f[:, 0]))
+        else:      # slot-state row
+            np.testing.assert_array_equal(np.asarray(d[:, 1]),
+                                          np.asarray(f[:, 0]))
+
+
+def test_scatter_decode_touches_only_written_block(qwen_serve):
+    cfg, _ = qwen_serve
+    spec = PoolSpec(num_slots=2, num_blocks=9, block_size=8, max_blocks=4)
+    kv = PagedKVCache(cfg, spec)
+    tables = np.zeros((2, 4), np.int32)
+    tables[0, :2] = [2, 4]
+    tables[1, :2] = [6, 7]
+    tables = jnp.asarray(tables)
+    pos = jnp.asarray([9, 3], jnp.int32)   # slot0 writes block 1, slot1 block 0
+
+    dense = kv.gather(kv.pool, tables)
+    dense = jax.tree.map(lambda a: a + 1.0 if a.ndim > 2 else a, dense)
+    pool = kv.scatter_decode(kv.pool, dense, tables, pos)
+    for leaf, paged in zip(jax.tree.leaves(pool), jax.tree.leaves(kv.paged)):
+        if not paged:
+            continue
+        arr = np.asarray(leaf)
+        assert np.all(arr[:, 4] != 0)      # slot0's touched block written
+        assert np.all(arr[:, 6] != 0)      # slot1's touched block written
+        assert np.all(arr[:, 2] == 0)      # slot0's untouched block intact
+        assert np.all(arr[:, 7] == 0)      # slot1's untouched block intact
+
+
+# ------------------------------------------------------------- scheduler ---
+
+
+def _mk(rid, arrival=0.0, plen=8, max_new=4):
+    return Request(rid=rid, prompt=list(range(plen)), max_new=max_new,
+                   arrival=arrival)
+
+
+def test_scheduler_admission_respects_arrival_and_slots():
+    s = Scheduler(ServeConfig(num_slots=2, block_size=8, num_blocks=9,
+                              max_blocks_per_slot=4, max_prefills_per_step=4))
+    for rid, t in enumerate([0.0, 0.0, 0.0, 5.0]):
+        s.submit(_mk(rid, arrival=t))
+    adm = s.admit(now=1.0)
+    assert [a.rid for a in adm] == [0, 1]          # FIFO, 2 slots
+    assert s.allocator.num_held == 2
+    # slot eviction refills from the arrived queue, not the future one
+    s.requests[0].generated = [1] * 4
+    assert s.evict_finished(now=1.5) == [0]
+    assert [a.rid for a in s.admit(now=1.5)] == [2]
+    s.requests[1].generated = [1] * 4
+    assert s.evict_finished(now=2.0) == [1]
+    assert s.admit(now=2.0) == []                  # rid 3 hasn't arrived yet
+    assert [a.rid for a in s.admit(now=6.0)] == [3]
+
+
+def test_scheduler_capacity_growth_and_preemption_recompute():
+    cfg = ServeConfig(num_slots=2, block_size=4, num_blocks=5,
+                      max_blocks_per_slot=4, max_prefills_per_step=4)
+    s = Scheduler(cfg)
+    s.submit(_mk(0, plen=4, max_new=8))
+    s.submit(_mk(1, plen=4, max_new=8))
+    adm = s.admit(now=0.0)
+    assert len(adm) == 2 and s.allocator.num_free == 2
+    for a in adm:
+        s.record_token(a.slot, 100 + a.rid, now=0.0)
+    # four decode steps take each slot from pos=4 to pos=8: the first step
+    # grows both to 2 blocks (pool now empty), pos=8 then wants a third
+    for _ in range(4):
+        assert s.ensure_capacity() == []
+        for slot in s.active_slots():
+            s.advance(slot)
+            s.record_token(slot, 7, now=0.1)
+    assert s.allocator.num_free == 0
+    preempted = s.ensure_capacity()
+    assert preempted == [1]                        # youngest-admitted victim
+    req = s.requests[1]
+    assert req.status is RequestStatus.WAITING and req.n_preemptions == 1
+    assert req.recompute_prompt == list(range(4)) + [101, 7, 7, 7, 7]
+    assert s.waiting[0] == 1                       # requeued at the head
+    assert s.allocator.num_held == sum(len(b) for b in s.blocks)
+    # survivor kept its blocks and can now grow
+    assert 0 in [s.slots[x] for x in s.active_slots()]
+
+
+def test_preemption_victim_is_youngest_even_if_requesting():
+    # rid 0 (older, mid-block, needs no growth) must keep its blocks when the
+    # younger rid 1 hits a block boundary on a dry pool: rid 1 preempts itself
+    cfg = ServeConfig(num_slots=2, block_size=4, num_blocks=4,
+                      max_blocks_per_slot=3, max_prefills_per_step=4)
+    s = Scheduler(cfg)
+    s.submit(_mk(0, plen=6, max_new=2))    # 2 blocks, pos 6 (mid-block)
+    s.submit(_mk(1, plen=4, max_new=4))    # 1 block, pos 4 (boundary)
+    adm = s.admit(now=0.0)
+    assert len(adm) == 2 and s.allocator.num_free == 0
+    assert s.ensure_capacity() == [1]
+    assert s.slots.count(None) == 1 and s.requests[0].status is RequestStatus.RUNNING
+    assert s.waiting == [1]
+    # with the pool freed, the preempted request re-admits and proceeds
+    assert [a.rid for a in s.admit(now=0.1)] == [1]
+
+
+def test_reset_restarts_injected_clock(qwen_serve):
+    cfg, params = qwen_serve
+    t = [0.0]
+    srv = MegaServe(cfg, params, ServeConfig(
+        num_slots=2, block_size=8, num_blocks=17, max_blocks_per_slot=4),
+        clock=lambda: t[0])
+    srv.submit(list(range(2, 10)), 2, arrival=0.0)
+    t[0] = 1.5
+    srv.drain()
+    assert srv.metrics()["wall_s"] == 1.5
+    srv.reset()                       # re-times from the injected clock's now
+    assert srv.metrics()["wall_s"] == 0.0
+
+
+def test_scheduler_rejects_infeasible_request():
+    s = Scheduler(ServeConfig(num_slots=1, block_size=4, num_blocks=3,
+                              max_blocks_per_slot=2))
+    with pytest.raises(ValueError):
+        s.submit(_mk(0, plen=8, max_new=8))        # needs 4 blocks, cap 2
+
+
+# ------------------------------------------------ continuous vs static ---
+
+
+def test_continuous_greedy_matches_static(qwen_serve):
+    cfg, params = qwen_serve
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(2, cfg.vocab_size, size=n).tolist()
+               for n in (16, 16, 32, 16)]
+    max_new = [6, 3, 5, 4]
+
+    srv = MegaServe(cfg, params, ServeConfig(
+        num_slots=2, block_size=8, num_blocks=33, max_blocks_per_slot=6))
+    for p, m in zip(prompts, max_new):
+        srv.submit(p, m, arrival=0.0)
+    outs = srv.drain()
+
+    ref, ref_met = StaticRunner(cfg, params).run(
+        [(p, m, 0.0) for p, m in zip(prompts, max_new)], batch_size=2)
+    assert outs == ref
+    met = srv.metrics()
+    assert met["generated_tokens"] == sum(max_new) == ref_met["generated_tokens"]
+    assert met["finished"] == 4 and met["preemptions"] == 0
+    # slot refill: mixed budgets on 2 slots must take fewer engine steps than
+    # the lockstep equivalent (sum of per-batch maxima)
+    assert met["steps"] < 6 + 5 + 2  # static: max(6,3) + max(5,4) + prefills
+
+
+def test_preemption_recompute_preserves_outputs(qwen_serve):
+    cfg, params = qwen_serve
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(2, cfg.vocab_size, size=16).tolist() for _ in range(3)]
+
+    # 8 usable blocks of 8 for three 16+12-token sequences -> must preempt
+    srv = MegaServe(cfg, params, ServeConfig(
+        num_slots=3, block_size=8, num_blocks=9, max_blocks_per_slot=4))
+    for p in prompts:
+        srv.submit(p, 12, arrival=0.0)
+    outs = srv.drain()
+    assert srv.metrics()["preemptions"] > 0
+
+    ref, _ = StaticRunner(cfg, params).run(
+        [(p, 12, 0.0) for p in prompts], batch_size=3)
+    assert outs == ref
+
+
+def test_continuous_state_family_rwkv():
+    cfg = get_config("rwkv6-3b", smoke=True).replace(compute_dtype="float32")
+    params = get_model(cfg).init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(2, cfg.vocab_size, size=n).tolist() for n in (8, 16)]
+    srv = MegaServe(cfg, params, ServeConfig(
+        num_slots=2, block_size=8, num_blocks=17, max_blocks_per_slot=4))
+    kv = srv.kv
+    assert not any(jax.tree.leaves(kv.paged))      # pure slot-state family
+    for p in prompts:
+        srv.submit(p, 4, arrival=0.0)
+    outs = srv.drain()
+    ref, _ = StaticRunner(cfg, params).run(
+        [(p, 4, 0.0) for p in prompts], batch_size=1)
+    assert outs == ref
+
+
+def test_budget_and_eos_respected_at_prefill(qwen_serve):
+    cfg, params = qwen_serve
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(2, cfg.vocab_size, size=8).tolist()
+
+    srv = MegaServe(cfg, params, ServeConfig(
+        num_slots=2, block_size=8, num_blocks=17, max_blocks_per_slot=4))
+    rid1 = srv.submit(prompt, 1, arrival=0.0)        # done at prefill
+    outs = srv.drain()
+    assert len(outs[rid1]) == 1
+
+    # eos emitted by the prefill itself must stop generation immediately
+    srv.reset()
+    first = outs[rid1][0]
+    rid2 = srv.submit(prompt, 10, arrival=0.0, eos_id=first)
+    outs = srv.drain()
+    assert outs[rid2] == [first]
+
+
+# ----------------------------------------------------------- integration ---
+
+
+def test_trace_events_and_scope_captures(qwen_serve):
+    from repro.core.scope import ProbeSpec, ScopeCollector
+
+    cfg, params = qwen_serve
+    scope = ScopeCollector(probes=[ProbeSpec("final_hidden", "stats")])
+    srv = MegaServe(cfg, params, ServeConfig(
+        num_slots=2, block_size=8, num_blocks=17, max_blocks_per_slot=4),
+        collector=scope)
+    rng = np.random.default_rng(3)
+    srv.submit(rng.integers(2, cfg.vocab_size, size=8).tolist(), 3, arrival=0.0)
+    srv.drain()
+
+    events = srv.trace_events()
+    kinds = {e.name for e in events}
+    assert {"prefill", "decode"} <= kinds
+    for e in events:
+        assert e.dur >= 0 and e.args.get("tokens", 0) >= 1
+    doc = to_chrome(events)                         # MegaScan-compatible
+    assert doc["traceEvents"]
+
+    stream = srv.streams[0]
+    assert len(stream) == 3
+    for item in stream:
+        caps = item.captures.get("top", item.captures)
+        assert any("final_hidden" in k for k in caps), caps
+
+
+def test_poisson_requests_inclusive_budget_range():
+    reqs = poisson_requests(64, rate=100.0, max_new_range=(1, 1), seed=0)
+    assert {r.max_new for r in reqs} == {1}
+    reqs = poisson_requests(256, rate=100.0, max_new_range=(4, 8), seed=0)
+    assert min(r.max_new for r in reqs) >= 4
+    assert max(r.max_new for r in reqs) == 8     # upper bound reachable
+
+
+def test_simkit_serving_policy_comparison():
+    reqs = poisson_requests(24, rate=200.0, seed=3)
+    eng = Engine()
+    cont = serving_throughput(eng.run(
+        serving_workload(reqs, policy="continuous", num_slots=4)))
+    stat = serving_throughput(eng.run(
+        serving_workload(reqs, policy="static", num_slots=4, batch_size=4)))
+    assert cont["tokens"] == stat["tokens"] == sum(r.max_new for r in reqs)
+    assert cont["tokens_per_s"] > stat["tokens_per_s"]
+
+
+def test_simkit_serving_respects_arrivals():
+    reqs = [RequestSpec(rid=0, arrival=0.5, prompt_len=8, max_new=2),
+            RequestSpec(rid=1, arrival=1.0, prompt_len=8, max_new=2)]
+    res = Engine().run(serving_workload(reqs, policy="continuous", num_slots=2))
+    starts = {r.tid: r.start for r in res.records}
+    assert starts["prefill_r0"] >= 0.5
+    assert starts["prefill_r1"] >= 1.0
