@@ -9,8 +9,10 @@ test:
 
 ci: test
 
+# decode-latency-vs-max_len sweep (paged vs gathered) + continuous-vs-static;
+# persists the perf trajectory to BENCH_serve.json
 bench-serve:
-	python benchmarks/serve_bench.py --smoke
+	python benchmarks/serve_bench.py --smoke --sweep --out BENCH_serve.json
 
 deps:
 	pip install -r requirements.txt

@@ -1,19 +1,31 @@
-"""Static vs continuous batching on a mixed-length Poisson-arrival workload.
+"""MegaServe benchmarks: continuous-vs-static and paged-vs-gathered decode.
 
-Both engines run the same model, same requests, same arrival process; each is
-warmed up (all shapes compiled) on an arrival-at-zero copy of the workload,
-then timed on a fresh replay with real arrival gaps.  Also reports the
-offline simkit projection of the same trace for cross-checking policy wins
-against the wall-clock run.
+Default mode replays a mixed-length Poisson-arrival workload through both
+engines (same model, same requests, same arrival process; each warmed up on
+an arrival-at-zero copy, then timed on a fresh replay), and cross-checks the
+offline simkit projection of the same trace.
+
+``--sweep`` additionally runs the decode-latency-vs-max_len sweep: the *same
+live workload* (fixed prompt/budget mix, so fixed live kv_len) is served out
+of pools of growing ``max_len``, once per decode path.  The gathered-dense
+oracle pays O(max_len) HBM traffic per decode step (gather + full-width
+attention), so its step time grows with the pool; the paged path walks block
+tables sliced to the live high-water mark, so its step time tracks kv_len and
+stays flat.  Results (and the headline comparison) are persisted to
+``--out`` (``BENCH_serve.json``) so the perf trajectory is recorded per PR.
 
     PYTHONPATH=src python benchmarks/serve_bench.py --arch qwen2-0.5b --smoke \
         --requests 24 --rate 150 --slots 4
+    PYTHONPATH=src python benchmarks/serve_bench.py --smoke --sweep \
+        --out BENCH_serve.json
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+from dataclasses import replace
 
 import jax
 
@@ -21,35 +33,31 @@ from repro.configs import get_config
 from repro.core.simkit.engine import Engine
 from repro.core.simkit.workload import serving_throughput, serving_workload
 from repro.models import get_model
-from repro.serve import MegaServe
+from repro.serve import MegaServe, ServeConfig
 from repro.serve.server import StaticRunner, make_poisson_workload
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-0.5b")
-    ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--full", dest="smoke", action="store_false")
-    ap.add_argument("--requests", type=int, default=24)
-    ap.add_argument("--rate", type=float, default=150.0,
-                    help="Poisson arrival rate, requests/s")
-    ap.add_argument("--slots", type=int, default=4,
-                    help="continuous slots == static batch size")
-    ap.add_argument("--block-size", type=int, default=16)
-    ap.add_argument("--num-blocks", type=int, default=0,
-                    help="physical KV blocks (0 = size for zero preemption)")
-    ap.add_argument("--prompt-lens", default="16,32,64,128,256")
-    ap.add_argument("--max-new-lo", type=int, default=4)
-    ap.add_argument("--max-new-hi", type=int, default=32)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+def _decode_stats(srv: MegaServe) -> dict:
+    import numpy as np
 
-    cfg = get_config(args.arch, smoke=args.smoke)
-    if cfg.input_kind != "tokens":
-        raise SystemExit(f"{cfg.name}: serve token archs")
-    m = get_model(cfg)
-    params = m.init(cfg, jax.random.PRNGKey(0))
+    evs = [e for e in srv.trace_events() if e.name == "decode"]
+    toks = sum(e.args.get("tokens", 0) for e in evs)
+    dur = sum(e.dur for e in evs)
+    # median step latency: robust against scheduler-noise stragglers, which
+    # otherwise dominate sub-ms smoke-model steps
+    med = float(np.median([e.dur for e in evs])) if evs else 0.0
+    return {
+        "decode_steps": len(evs),
+        "decode_tokens": toks,
+        "decode_s": round(dur, 4),
+        "decode_ms_per_step": round(1e3 * med, 3),
+        "decode_tok_s": round(
+            toks / max(len(evs), 1) / max(med, 1e-9), 2
+        ),
+    }
 
+
+def run_continuous_vs_static(cfg, params, args) -> dict:
     lens = tuple(int(x) for x in args.prompt_lens.split(","))
     specs, prompts, scfg = make_poisson_workload(
         cfg,
@@ -63,7 +71,6 @@ def main() -> None:
           f"max_new {args.max_new_lo}-{args.max_new_hi}")
 
     # ----------------------------------------------------------- continuous
-    bs = args.block_size
     srv = MegaServe(cfg, params, scfg)
     for s in specs:                                   # warmup: compile shapes
         srv.submit(prompts[s.rid], s.max_new, arrival=0.0)
@@ -95,7 +102,8 @@ def main() -> None:
               f"preempt {met.get('preemptions', 0)}")
 
     print(f"\nwall-clock ({cfg.name}, slots/batch={args.slots}, "
-          f"pool {scfg.num_blocks}x{bs}):")
+          f"pool {scfg.num_blocks}x{args.block_size}, "
+          f"decode_path={srv.decode_path}):")
     row("static", stat)
     row("continuous", cont)
     speedup = cont["tokens_per_s"] / max(stat["tokens_per_s"], 1e-9)
@@ -110,8 +118,127 @@ def main() -> None:
           f"tok/s vs static {sim_s['tokens_per_s']:.0f} tok/s "
           f"({sim_c['tokens_per_s']/sim_s['tokens_per_s']:.2f}x)")
 
-    if speedup <= 1.0:
+    return {
+        "decode_path": srv.decode_path,
+        "static": stat,
+        "continuous": cont,
+        "speedup_tokens_per_s": round(speedup, 3),
+        "simkit": {"continuous_tok_s": sim_c["tokens_per_s"],
+                   "static_tok_s": sim_s["tokens_per_s"]},
+        "ok": speedup > 1.0,
+    }
+
+
+def run_decode_sweep(cfg, params, args) -> dict:
+    """Decode step latency vs pool ``max_len`` at fixed live kv_len."""
+    bs = args.block_size
+    plen = args.sweep_prompt_len
+    max_new = args.sweep_max_new
+    n = args.sweep_requests
+    mean_kv = plen + max_new / 2
+    import numpy as np
+    rng = np.random.default_rng(args.seed)
+    prompts = [rng.integers(2, cfg.vocab_size, size=plen).tolist()
+               for _ in range(n)]
+
+    sweep = []
+    for max_blocks in (int(x) for x in args.sweep_max_blocks.split(",")):
+        max_len = max_blocks * bs
+        scfg = ServeConfig(
+            num_slots=args.slots, block_size=bs,
+            num_blocks=args.slots * max_blocks + 1,
+            max_blocks_per_slot=max_blocks,
+        )
+        entry = {"max_len": max_len, "max_blocks": max_blocks,
+                 "mean_kv_len": mean_kv,
+                 "max_len_over_mean_kv": round(max_len / mean_kv, 2)}
+        for path in ("paged", "gathered"):
+            srv = MegaServe(cfg, params, replace(scfg, decode_path=path))
+            for p in prompts:                          # warmup
+                srv.submit(p, max_new, arrival=0.0)
+            srv.drain()
+            srv.reset()
+            for p in prompts:                          # timed
+                srv.submit(p, max_new, arrival=0.0)
+            srv.drain()
+            entry[path] = _decode_stats(srv)
+        entry["decode_speedup"] = round(
+            entry["paged"]["decode_tok_s"]
+            / max(entry["gathered"]["decode_tok_s"], 1e-9), 2)
+        sweep.append(entry)
+        print(f"  max_len {max_len:5d} ({entry['max_len_over_mean_kv']:5.1f}x "
+              f"mean kv_len {mean_kv:.0f}): paged "
+              f"{entry['paged']['decode_ms_per_step']:7.2f} ms/step "
+              f"({entry['paged']['decode_tok_s']:8.1f} tok/s)  gathered "
+              f"{entry['gathered']['decode_ms_per_step']:7.2f} ms/step "
+              f"({entry['gathered']['decode_tok_s']:8.1f} tok/s)  "
+              f"-> {entry['decode_speedup']:.2f}x")
+
+    # acceptance: paged decode cost tracks live kv_len, not pool max_len —
+    # at max_len/mean_kv >= 4 the paged path must hold >= 2x decode tokens/s
+    gated = [e for e in sweep if e["max_len_over_mean_kv"] >= 4.0]
+    ok = bool(gated) and all(e["decode_speedup"] >= 2.0 for e in gated)
+    return {"slots": args.slots, "block_size": bs,
+            "prompt_len": plen, "max_new": max_new, "requests": n,
+            "points": sweep, "ok": ok}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--rate", type=float, default=150.0,
+                    help="Poisson arrival rate, requests/s")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="continuous slots == static batch size")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="physical KV blocks (0 = size for zero preemption)")
+    ap.add_argument("--prompt-lens", default="16,32,64,128,256")
+    ap.add_argument("--max-new-lo", type=int, default=4)
+    ap.add_argument("--max-new-hi", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sweep", action="store_true",
+                    help="decode-latency-vs-max_len paged/gathered sweep")
+    ap.add_argument("--sweep-max-blocks", default="4,16,64",
+                    help="pool max_blocks_per_slot values to sweep")
+    ap.add_argument("--sweep-prompt-len", type=int, default=16)
+    ap.add_argument("--sweep-max-new", type=int, default=24)
+    ap.add_argument("--sweep-requests", type=int, default=12)
+    ap.add_argument("--out", default="",
+                    help="write results JSON (e.g. BENCH_serve.json)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if cfg.input_kind != "tokens":
+        raise SystemExit(f"{cfg.name}: serve token archs")
+    m = get_model(cfg)
+    params = m.init(cfg, jax.random.PRNGKey(0))
+
+    results: dict = {"arch": cfg.name, "smoke": args.smoke,
+                     "backend": jax.default_backend()}
+    ok = True
+    if args.sweep:
+        print(f"decode-latency sweep ({cfg.name}, slots={args.slots}, "
+              f"block_size={args.block_size}):")
+        results["decode_sweep"] = run_decode_sweep(cfg, params, args)
+        ok &= results["decode_sweep"]["ok"]
+        if not results["decode_sweep"]["ok"]:
+            print("FAIL: paged decode did not hold >=2x tokens/s at "
+                  "max_len/mean_kv_len >= 4")
+        print()
+    results["continuous_vs_static"] = run_continuous_vs_static(cfg, params, args)
+    ok &= results["continuous_vs_static"]["ok"]
+    if not results["continuous_vs_static"]["ok"]:
         print("FAIL: continuous batching did not beat static batching")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+        print(f"wrote {args.out}")
+    if not ok:
         sys.exit(1)
     print("OK")
 

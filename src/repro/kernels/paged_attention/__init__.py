@@ -1,0 +1,10 @@
+from repro.kernels.paged_attention.ops import PagedInfo, paged_attention
+from repro.kernels.paged_attention.kernel import paged_attention_pallas
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+__all__ = [
+    "PagedInfo",
+    "paged_attention",
+    "paged_attention_pallas",
+    "paged_attention_ref",
+]

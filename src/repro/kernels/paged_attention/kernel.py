@@ -1,0 +1,191 @@
+"""Paged-attention decode Pallas TPU kernel (block-table walk, no gather).
+
+Single-token decode attention for ``S`` serving slots directly against the
+physical KV block pool: no dense ``[S, max_len, ...]`` view is ever
+materialized.  Layout:
+
+    q       [S, H, dh]            one query token per slot
+    k_pool  [(n_layers,) num_blocks, bs, K, dh]   the physical pool
+    v_pool  [(n_layers,) num_blocks, bs, K, dv]   (see PagedKVCache)
+    tables  [S, M] int32          per-slot block tables (padding -> null 0)
+    kv_len  [S] int32             live positions per slot (incl. this token)
+    layer   scalar int32          pool layer for the 5-D layer-stacked layout
+                                  (rides scalar prefetch into the index maps,
+                                  so the stacked pool is never sliced in HBM)
+
+Grid ``(slot, table-entry)`` with the table walk innermost/sequential; the
+``tables`` and ``kv_len`` arrays ride scalar prefetch
+(``pltpu.PrefetchScalarGridSpec``), so the K/V BlockSpec index maps resolve
+``tables[s, j]`` *before* the body runs and each step DMAs exactly one
+physical block out of the pool.  All KV heads of a block are fetched in one
+block (grid iterates table entries, not kv-heads: each block is touched once
+per slot instead of once per head) and the GQA head arithmetic happens
+in-register on the ``[K, G, dh]`` reshaped query.
+
+Online softmax state (running max / denominator / unnormalized accumulator)
+lives in revisited output blocks whose index maps ignore ``j`` — VMEM-resident
+across the sweep, normalized in place on the last step (the same pattern as
+``flash_attention``).
+
+Early exit: entries at or past a slot's last live block — and, for windowed
+attention, entries wholly before the window's reach — contribute nothing:
+``pl.when`` skips their compute *and* the index map clamps onto the live
+range so the pipeline re-fetches a resident block instead of streaming dead
+pool blocks.  Per-slot HBM traffic is therefore O(kv_len) (O(window) for
+windowed families), not O(max_len); the caller is still free to slice
+``tables`` down to the live-block high-water mark so the grid itself shrinks
+too.
+
+(The pool keeps the model's trailing ``[K, dh]`` feature layout, so a K/V
+block tile is ``(bs, K, dh)`` with the small kv-head dim second-to-last —
+suboptimal TPU sublane tiling for tiny K, traded for gather/scatter-free
+interop with the serving cache pytree.)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _paged_kernel(
+    tbl_ref, len_ref, lay_ref,     # scalar-prefetch: tables [S,M], kv_len [S],
+    q_ref, k_ref, v_ref,           #   layer [1]; then q [1, H, dh] and the
+    o_ref, m_ref, l_ref,           #   K/V blocks [1, 1, bs, K, d*]; outputs
+    *, scale: float, window: int | None, block_size: int,
+    n_kv: int, q_per_kv: int,
+):
+    s = pl.program_id(0)
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    kvl = len_ref[s]
+    K, G = n_kv, q_per_kv
+
+    # early exit: skip table entries past the last live position, and — for
+    # windowed attention — entries wholly before the window's reach
+    live = j * block_size < kvl
+    if window is not None:
+        live &= j * block_size + block_size > kvl - window
+
+    @pl.when(live)
+    def _accumulate():
+        q = q_ref[0].astype(jnp.float32).reshape(K, G, -1)
+        kb = k_ref[0, 0].astype(jnp.float32)                 # [bs, K, dh]
+        vb = v_ref[0, 0].astype(jnp.float32)                 # [bs, K, dv]
+        sc = jnp.einsum(
+            "kgd,bkd->kgb", q, kb, preferred_element_type=jnp.float32
+        ) * scale                                            # [K, G, bs]
+
+        pos = j * block_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, 1, block_size), 2
+        )
+        mask = pos < kvl
+        if window is not None:
+            mask &= pos > kvl - 1 - window
+        sc = jnp.where(mask, sc, NEG)
+
+        m_prev = m_ref[0].reshape(K, G)
+        l_prev = l_ref[0].reshape(K, G)
+        m_new = jnp.maximum(m_prev, sc.max(-1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(sc - m_new[..., None])
+        p = jnp.where(mask, p, 0.0)
+        l_new = l_prev * corr + p.sum(-1)
+        acc = o_ref[0].astype(jnp.float32).reshape(K, G, -1) * corr[..., None]
+        acc = acc + jnp.einsum(
+            "kgb,bkv->kgv", p, vb, preferred_element_type=jnp.float32
+        )
+        m_ref[0] = m_new.reshape(K * G)
+        l_ref[0] = l_new.reshape(K * G)
+        # o_ref is f32: re-quantizing the running accumulator through the
+        # model dtype every block step would compound bf16 rounding over
+        # long kv_lens and drift off the gathered-dense oracle
+        o_ref[0] = acc.reshape(K * G, -1)
+
+    @pl.when(j == nj - 1)
+    def _normalize():
+        l = l_ref[0]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = o_ref[0] / denom[:, None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "window", "interpret")
+)
+def paged_attention_pallas(
+    q: jax.Array,        # [S, H, dh]
+    k_pool: jax.Array,   # [(n,) num_blocks, bs, K, dh]
+    v_pool: jax.Array,   # [(n,) num_blocks, bs, K, dv]
+    tables: jax.Array,   # [S, M] int32
+    kv_len: jax.Array,   # [S] int32
+    *,
+    scale: float,
+    window: int | None = None,
+    interpret: bool = False,
+    layer: jax.Array | None = None,  # indexes layer-stacked 5-D pools
+) -> jax.Array:
+    S, H, dh = q.shape
+    if k_pool.ndim == 4:  # single-layer pool: lift to the stacked layout
+        k_pool, v_pool = k_pool[None], v_pool[None]
+        layer = jnp.zeros((), jnp.int32)
+    _, _, bs, K, dv = v_pool.shape
+    M = tables.shape[1]
+    G = H // K
+    assert K * G == H, (H, K)
+    tables = tables.astype(jnp.int32)
+    kv_len = kv_len.astype(jnp.int32)
+    lay = jnp.asarray(layer, jnp.int32).reshape(1)
+
+    def kv_map(s, j, tbl, kvl, lay):
+        # clamp dead entries onto the live range [first, last]: same index as
+        # an adjacent step -> the pipeline skips the DMA instead of streaming
+        # blocks the body would ignore anyway (past the last live position,
+        # or — for windowed attention — wholly before the window's reach)
+        last = jnp.maximum(kvl[s] - 1, 0) // bs
+        jj = jnp.minimum(j, last)
+        if window is not None:
+            first = jnp.maximum(kvl[s] - window, 0) // bs
+            jj = jnp.maximum(jj, jnp.minimum(first, last))
+        return (lay[0], tbl[s, jj], 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(S, M),
+        in_specs=[
+            pl.BlockSpec((1, H, dh), lambda s, j, tbl, kvl, lay: (s, 0, 0)),
+            pl.BlockSpec((1, 1, bs, K, dh), kv_map),
+            pl.BlockSpec((1, 1, bs, K, dv), kv_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, H, dv), lambda s, j, tbl, kvl, lay: (s, 0, 0)),
+            pl.BlockSpec((1, H), lambda s, j, tbl, kvl, lay: (s, 0)),
+            pl.BlockSpec((1, H), lambda s, j, tbl, kvl, lay: (s, 0)),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _paged_kernel, scale=scale, window=window, block_size=bs,
+            n_kv=K, q_per_kv=G,
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((S, H, dv), jnp.float32),
+            jax.ShapeDtypeStruct((S, H), jnp.float32),
+            jax.ShapeDtypeStruct((S, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(tables, kv_len, lay, q, k_pool, v_pool)
+    return out[0].astype(q.dtype)

@@ -1,0 +1,73 @@
+"""Dispatching wrapper: model layout <-> kernel layout + the paged-view token.
+
+``PagedInfo`` is the small pytree the serving engine threads through
+``lm.forward`` down to ``layers.attention`` to flip a block from the dense
+cached path onto the paged pool: the block's cache leaves then *are* pool
+arrays ``[num_blocks, bs, *feat]`` and attention walks ``tables`` instead of
+a gathered dense view.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_attention_pallas
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class PagedInfo:
+    """Paged-KV view descriptor: the per-slot block tables (traced; possibly
+    sliced to the live-block high-water mark) plus static pool geometry and
+    kernel dispatch choice.
+
+    ``layer``, when set, marks the cache leaves as *whole layer-stacked*
+    pools ``[n_layers, num_blocks, bs, *feat]`` indexed at that layer —
+    ``lm.forward`` threads the stacked pools through its scan carry (updated
+    in place via layer-indexed scatters) instead of slicing them into scan
+    xs/ys, which would re-stack the full pool every decode step."""
+
+    tables: jax.Array       # [S, M] int32, padding entries -> null block 0
+    block_size: int
+    impl: str = "auto"      # auto | xla | pallas | pallas_interpret
+    layer: jax.Array | None = None  # scalar layer index into stacked pools
+
+    def tree_flatten(self):
+        return (self.tables, self.layer), (self.block_size, self.impl)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        tables, layer = children
+        return cls(tables, aux[0], aux[1], layer)
+
+
+def paged_attention(
+    q: jax.Array,        # [S, 1, H, dh] (model decode layout) or [S, H, dh]
+    k_pool: jax.Array,   # [(n_layers,) num_blocks, bs, K, dh]
+    v_pool: jax.Array,   # [(n_layers,) num_blocks, bs, K, dv]
+    *,
+    tables: jax.Array,   # [S, M] int32
+    kv_len: jax.Array,   # [S] int32 (live positions incl. the current token)
+    scale: float,
+    window: int | None = None,
+    impl: str = "auto",
+    layer: jax.Array | None = None,  # required for layer-stacked (5-D) pools
+) -> jax.Array:
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    squeeze = q.ndim == 4
+    q3 = q[:, 0] if squeeze else q
+    if impl == "xla":
+        o = paged_attention_ref(
+            q3, k_pool, v_pool, tables, kv_len, scale=scale, window=window,
+            layer=layer,
+        )
+    else:
+        o = paged_attention_pallas(
+            q3, k_pool, v_pool, tables, kv_len, scale=scale, window=window,
+            interpret=(impl == "pallas_interpret"), layer=layer,
+        )
+    return o[:, None] if squeeze else o

@@ -1,0 +1,62 @@
+"""XLA reference / fallback for the paged-attention decode kernel.
+
+Gathers each slot's live blocks out of the pool (``k_pool[tables]`` — table
+width, not pool size, bounds the traffic) and mirrors the naive masked-softmax
+decode attention in ``models.layers.attention`` operation-for-operation: same
+einsum labels, same ``BIG_NEG`` masking, same ``p.astype(v.dtype)`` cast, same
+f32 accumulation.  Padding positions get exactly-zero probabilities, so the
+output is invariant to the table width — which makes this both the interpret-
+mode parity oracle for ``kernel.py`` and the serving fast path on non-TPU
+backends (the caller slices ``tables`` to the live-block high-water mark, so
+cost tracks kv_len, not pool max_len).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def paged_attention_ref(
+    q: jax.Array,        # [S, H, dh]
+    k_pool: jax.Array,   # [(n,) num_blocks, bs, K, dh]
+    v_pool: jax.Array,   # [(n,) num_blocks, bs, K, dv]
+    tables: jax.Array,   # [S, M] int32
+    kv_len: jax.Array,   # [S] int32
+    *,
+    scale: float,
+    window: int | None = None,
+    layer: jax.Array | None = None,  # indexes layer-stacked 5-D pools
+) -> jax.Array:
+    S, H, dh = q.shape
+    bs, K, dv = v_pool.shape[-3:]
+    M = tables.shape[1]
+    G = H // K
+    flat = tables.reshape(-1)
+    if k_pool.ndim == 5:
+        # one fused (layer, block) gather — never materializes a layer slice
+        k = k_pool[layer, flat]
+        v = v_pool[layer, flat]
+    else:
+        k = jnp.take(k_pool, flat, axis=0)
+        v = jnp.take(v_pool, flat, axis=0)
+    k = k.reshape(S, M * bs, K, dh).astype(q.dtype)
+    v = v.reshape(S, M * bs, K, dv).astype(q.dtype)
+
+    qg = q.reshape(S, 1, K, G, dh)
+    s = jnp.einsum(
+        "bskgd,btkd->bskgt", qg, k, preferred_element_type=jnp.float32
+    ) * scale                                              # [S, 1, K, G, T]
+    pos = jnp.arange(M * bs)[None, :]
+    mask = pos < kv_len[:, None]
+    if window is not None:
+        mask &= pos > kv_len[:, None] - 1 - window
+    s = jnp.where(mask[:, None, None, None, :], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bskgt,btkd->bskgd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return o.reshape(S, H, dv).astype(q.dtype)

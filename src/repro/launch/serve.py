@@ -30,6 +30,8 @@ from repro.serve.sampler import sample
 
 
 def _run_continuous(cfg, args) -> None:
+    from dataclasses import replace
+
     from repro.serve import MegaServe
     from repro.serve.server import make_poisson_workload
 
@@ -43,6 +45,7 @@ def _run_continuous(cfg, args) -> None:
         num_slots=args.slots, block_size=args.block_size,
         num_blocks=args.num_blocks, seed=args.seed,
     )
+    serve_cfg = replace(serve_cfg, decode_path=args.decode_path)
     srv = MegaServe(cfg, params, serve_cfg)
     for s in specs:
         srv.submit(prompts[s.rid], s.max_new, arrival=s.arrival)
@@ -50,7 +53,7 @@ def _run_continuous(cfg, args) -> None:
     met = srv.metrics()
     print(f"arch={cfg.name} continuous slots={args.slots} "
           f"blocks={serve_cfg.num_blocks}x{serve_cfg.block_size} "
-          f"requests={len(specs)}")
+          f"requests={len(specs)} decode_path={srv.decode_path}")
     for k in ("generated_tokens", "wall_s", "tokens_per_s", "ttft_p50_s",
               "ttft_p99_s", "latency_p50_s", "latency_p99_s", "preemptions",
               "steps"):
@@ -79,6 +82,10 @@ def main() -> None:
     ap.add_argument("--num-blocks", type=int, default=0,
                     help="physical KV blocks (0 = size for zero preemption)")
     ap.add_argument("--prompt-lens", default="16,32,64,128,256")
+    ap.add_argument("--decode-path", default="auto",
+                    choices=("auto", "paged", "gathered"),
+                    help="paged = no-gather block-pool decode (default when "
+                         "supported); gathered = dense-view oracle")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

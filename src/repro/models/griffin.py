@@ -123,6 +123,7 @@ def griffin_block_apply(
     positions: jax.Array,
     state: dict | None = None,
     cache_pos: jax.Array | None = None,
+    paged=None,
     collector: Collector = NULL_COLLECTOR,
 ) -> tuple[jax.Array, dict | None]:
     x = shard_act(x, ("batch", "seq_act", "embed_act"))
@@ -138,6 +139,7 @@ def griffin_block_apply(
             window=cfg.griffin.window,
             cache=state,
             cache_pos=cache_pos,
+            paged=paged,
             collector=collector,
         )
     x = x + collector.tag("att_resid", a)

@@ -137,12 +137,13 @@ def rope_freqs(dim: int, theta: float) -> jax.Array:
 
 
 def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
-    """x [B, S, H, D] or [B, S, D]; positions [S] absolute positions."""
+    """x [B, S, H, D] or [B, S, D]; positions [S] shared or [B, S] per-row
+    absolute positions (the paged decode step carries one position per slot)."""
     d = x.shape[-1]
     freqs = rope_freqs(d, theta)  # [d/2]
-    ang = positions[:, None].astype(jnp.float32) * freqs  # [S, d/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [(B,) S, d/2]
     if x.ndim == 4:  # head dim present: [B, S, H, D]
-        ang = ang[:, None, :]  # [S, 1, d/2]
+        ang = ang[..., None, :]  # [(B,) S, 1, d/2]
     cos, sin = jnp.cos(ang), jnp.sin(ang)
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
     out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
@@ -213,8 +214,22 @@ def attention(
     kv_len: jax.Array | None = None,
     impl: str = "chunked",
     kv_chunk: int = 1024,
+    paged: Any | None = None,  # kernels.paged_attention.ops.PagedInfo
     collector: Collector = NULL_COLLECTOR,
 ) -> jax.Array:
+    if paged is not None:
+        # paged-KV decode: k/v are the *physical block pool* ``[num_blocks,
+        # bs, K, D]`` and the kernel walks ``paged.tables`` instead of a
+        # gathered dense view — S == 1, per-slot ``kv_len`` masks dead
+        # positions.  (No ``attn_probs`` tag on this path: probabilities
+        # never materialize outside the kernel.)
+        from repro.kernels.paged_attention.ops import paged_attention
+
+        return paged_attention(
+            q, k, v, tables=paged.tables, kv_len=kv_len, scale=scale,
+            window=window, impl=paged.impl, layer=paged.layer,
+        )
+
     B, S, H, D = q.shape
     T, K = k.shape[1], k.shape[2]
     Dv = v.shape[-1]
@@ -438,8 +453,9 @@ def gqa_apply(
     window: int | None = None,
     causal: bool = True,
     cache: dict | None = None,  # {"k","v"} [B, T, K, dh] ring/linear cache
-    cache_pos: jax.Array | None = None,  # scalar write position
+    cache_pos: jax.Array | None = None,  # scalar write position, or [B] paged
     mrope_position_ids: jax.Array | None = None,  # [3, B, S]
+    paged: Any | None = None,  # PagedInfo: cache leaves are pool blocks
     collector: Collector = NULL_COLLECTOR,
 ) -> tuple[jax.Array, dict | None]:
     B, S, D = x.shape
@@ -465,7 +481,36 @@ def gqa_apply(
 
     kv_len = None
     new_cache = None
-    if cache is not None:
+    if cache is not None and paged is not None:
+        # paged decode: cache leaves are the physical pool ``[(n_layers,)
+        # num_blocks, bs, K, dh]`` shared by all slots; the new token's K/V
+        # go *straight into the block owning each slot's write position* (no
+        # dense gather, no block write-back).  Inactive slots sit at pos 0 of
+        # the null block — their writes collide there harmlessly and are
+        # masked by kv_len.  Values quantize through bfloat16 (the lm
+        # attention-cache dtype) even when the pool container is wider: XLA
+        # CPU cannot alias bfloat16 scatters, so such pools store bf16 values
+        # in f32 so the in-place update actually stays in place.
+        assert S == 1, "paged path is single-token decode"
+        kk = apply_rope(kk, positions, cfg.rope_theta)
+        kk = collector.tag("k", kk)
+        pos = positions[:, 0]                       # [B] per-slot positions
+        bs = paged.block_size
+        phys = jnp.take_along_axis(
+            paged.tables, (pos // bs)[:, None], axis=1
+        )[:, 0]                                     # [B] owning pool block
+        k_new = kk[:, 0].astype(jnp.bfloat16).astype(cache["k"].dtype)
+        v_new = vv[:, 0].astype(jnp.bfloat16).astype(cache["v"].dtype)
+        if paged.layer is None:
+            ck = cache["k"].at[phys, pos % bs].set(k_new)
+            cv = cache["v"].at[phys, pos % bs].set(v_new)
+        else:  # layer-stacked pools riding lm.forward's scan carry
+            ck = cache["k"].at[paged.layer, phys, pos % bs].set(k_new)
+            cv = cache["v"].at[paged.layer, phys, pos % bs].set(v_new)
+        new_cache = {"k": ck, "v": cv}
+        kf, vf = ck, cv
+        kv_len = pos + 1
+    elif cache is not None:
         # decode / cached path: rope the new K, write kv at cache_pos
         if mrope:
             kk = apply_mrope(kk, mrope_position_ids, cfg.mrope_sections, cfg.rope_theta)
@@ -495,8 +540,15 @@ def gqa_apply(
     # masked — wasted score FLOPs are <3% of model FLOPs even at 32k, and the
     # flash custom-VJP keeps memory flat, unlike the banded local_block path)
     impl = cfg.attn_impl
+    if paged is not None:
+        # pool leaves stay in cache dtype: casting here would materialize a
+        # full pool-sized copy per layer — the kernel/ref upcasts only the
+        # blocks it actually reads
+        kf_a, vf_a = kf, vf
+    else:
+        kf_a, vf_a = kf.astype(x.dtype), vf.astype(x.dtype)
     o = attention(
-        q.astype(x.dtype), kf.astype(x.dtype), vf.astype(x.dtype),
+        q.astype(x.dtype), kf_a, vf_a,
         scale=1.0 / math.sqrt(dh),
         positions_q=positions,
         causal=causal,
@@ -504,6 +556,7 @@ def gqa_apply(
         kv_len=kv_len,
         impl=impl,
         kv_chunk=cfg.attn_kv_chunk,
+        paged=paged,
         collector=collector,
     )
     o = collector.tag("attn_out", o)
@@ -548,8 +601,13 @@ def mla_apply(
     positions: jax.Array,
     cache: dict | None = None,  # {"ckv": [B,T,r], "kpe": [B,T,dr]}
     cache_pos: jax.Array | None = None,
+    paged: Any | None = None,
     collector: Collector = NULL_COLLECTOR,
 ) -> tuple[jax.Array, dict | None]:
+    if paged is not None:
+        # the latent-space cache has no kv-head axis for the paged kernel to
+        # walk; MLA serves through the gathered-dense oracle path instead
+        raise NotImplementedError("paged decode does not support MLA")
     m = cfg.mla
     B, S, D = x.shape
     H = cfg.num_heads

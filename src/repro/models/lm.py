@@ -11,6 +11,7 @@ executed with ``lax.scan`` + per-layer remat, keeping HLO size O(1) in depth:
 from __future__ import annotations
 
 import math
+from dataclasses import replace
 from functools import partial
 from typing import Any, Callable
 
@@ -108,6 +109,7 @@ def _block_apply(
     cache: dict | None,
     cache_pos: jax.Array | None,
     mrope_position_ids: jax.Array | None,
+    paged: Any | None,
     collector: Collector,
 ) -> tuple[jax.Array, dict | None, dict]:
     # anchor the block input: the constraint's transpose pins the residual
@@ -121,7 +123,7 @@ def _block_apply(
         x, st = gf.griffin_block_apply(
             p, cfg, kind, x,
             positions=positions, state=cache, cache_pos=cache_pos,
-            collector=collector,
+            paged=paged, collector=collector,
         )
         return x, st, {}
     aux: dict = {}
@@ -129,13 +131,13 @@ def _block_apply(
     if cfg.use_mla:
         a, new_cache = L.mla_apply(
             p["attn"], cfg, h, positions=positions, cache=cache,
-            cache_pos=cache_pos, collector=collector,
+            cache_pos=cache_pos, paged=paged, collector=collector,
         )
     else:
         a, new_cache = L.gqa_apply(
             p["attn"], cfg, h, positions=positions, cache=cache,
             cache_pos=cache_pos, mrope_position_ids=mrope_position_ids,
-            collector=collector,
+            paged=paged, collector=collector,
         )
     x = _resid(cfg, x, collector.tag("att_resid", a))
     h = L.norm_apply(p["ln2"], x, cfg.norm_kind, cfg.norm_eps)
@@ -216,6 +218,27 @@ def param_axes(cfg: ModelConfig) -> dict:
 # ---------------------------------------------------------------------------
 
 
+def _split_cache(tree: Any, flags: Any) -> tuple[Any, Any]:
+    """Partition a nested-dict cache by a mirrored bool tree into
+    (flagged, unflagged) trees of identical structure with ``None`` at the
+    dropped leaf positions (``None`` leaves are empty pytrees, so scan/vmap
+    simply skip them)."""
+    if isinstance(tree, dict):
+        a, b = {}, {}
+        for k, v in tree.items():
+            a[k], b[k] = _split_cache(v, flags[k])
+        return a, b
+    return (tree, None) if flags else (None, tree)
+
+
+def _merge_cache(a: Any, b: Any) -> Any:
+    """Inverse of ``_split_cache``: overlay two structurally-identical trees
+    with complementary ``None`` leaves."""
+    if isinstance(a, dict):
+        return {k: _merge_cache(a[k], b[k]) for k in a}
+    return a if b is None else b
+
+
 def _embed_inputs(cfg: ModelConfig, params: dict, batch: dict, dtype) -> jax.Array:
     if cfg.input_kind == "tokens":
         return L.embed_apply(params, cfg, batch["tokens"], dtype)
@@ -232,14 +255,31 @@ def forward(
     *,
     cache: dict | None = None,
     cache_pos: jax.Array | None = None,
+    paged: Any | None = None,
+    paged_flags: Any | None = None,
     collector: Collector = NULL_COLLECTOR,
 ) -> tuple[jax.Array, dict | None, dict]:
-    """Returns (hidden [B,S,D], new_cache, aux)."""
+    """Returns (hidden [B,S,D], new_cache, aux).
+
+    When ``paged`` (a ``kernels.paged_attention.ops.PagedInfo``) is set, the
+    attention leaves of ``cache`` are layer-stacked physical pool arrays
+    shared across the batch, ``cache_pos`` is a per-row ``[B]`` vector of
+    slot positions, and attention streams K/V blocks via the paged kernel
+    instead of a dense cache (see ``serve.engine.make_paged_decode_step``).
+    ``paged_flags`` (a bool tree mirroring ``cache``, e.g.
+    ``PagedKVCache.paged``) marks which leaves are pools: those ride the
+    layer scan's *carry* and are updated in place by layer-indexed scatters —
+    scanning them through xs/ys would re-stack the entire pool every decode
+    step, turning an O(kv_len) step back into an O(pool) one.  Slot-state
+    leaves (rwkv/griffin recurrent state) stay in xs/ys as usual.
+    """
     dtype = jnp.dtype(cfg.compute_dtype)
     x = _embed_inputs(cfg, params, batch, dtype)
     B, S, _ = x.shape
     if cache_pos is None:
         positions = jnp.arange(S)
+    elif jnp.ndim(cache_pos) == 1:  # per-slot positions (paged decode)
+        positions = cache_pos[:, None] + jnp.arange(S)[None, :]
     else:
         positions = cache_pos + jnp.arange(S)
     mrope_ids = batch.get("mrope_position_ids")
@@ -253,23 +293,38 @@ def forward(
     for i, (kinds, n) in enumerate(segment_layout(cfg)):
         seg_p = params[f"seg{i}"]
         seg_cache = cache.get(f"seg{i}") if cache is not None else None
+        if paged is not None and seg_cache is not None:
+            seg_flags = paged_flags[f"seg{i}"]
+            seg_pool, seg_state = _split_cache(seg_cache, seg_flags)
+        else:
+            seg_flags, seg_pool, seg_state = None, None, seg_cache
 
-        def body(carry, xs, kinds=kinds, offset=layer_offset):
-            xc, aux_c = carry
+        def body(carry, xs, kinds=kinds, offset=layer_offset, flags=seg_flags):
+            xc, aux_c, pool_c = carry
             layer_p, layer_cache, g = xs
             new_layer_cache = {} if layer_cache is not None else None
             captured = {}
             for j, kind in enumerate(kinds):
                 col = LayerScoped(collector, offset + g * len(kinds) + j)
                 blk_cache = None if layer_cache is None else layer_cache[f"b{j}"]
+                blk_paged = None
+                if pool_c is not None:
+                    # overlay this block's pool leaves (full stacks from the
+                    # carry, addressed at layer g) onto its slot-state slice
+                    blk_cache = _merge_cache(pool_c[f"b{j}"], blk_cache)
+                    blk_paged = replace(paged, layer=g)
                 xc, c_new, aux = _block_apply(
                     layer_p[f"b{j}"], cfg, kind, xc,
                     positions=positions,
                     cache=blk_cache,
                     cache_pos=cache_pos,
                     mrope_position_ids=mrope_ids,
+                    paged=blk_paged,
                     collector=col,
                 )
+                if pool_c is not None and c_new is not None:
+                    p_new, c_new = _split_cache(c_new, flags[f"b{j}"])
+                    pool_c = {**pool_c, f"b{j}": p_new}
                 if new_layer_cache is not None:
                     new_layer_cache[f"b{j}"] = c_new
                 if aux:
@@ -280,7 +335,7 @@ def forward(
                     pre = f"b{j}/" if len(kinds) > 1 else ""
                     captured.update({pre + k: v for k, v in probes.items()})
             ys = (new_layer_cache, captured)
-            return (xc, aux_c), ys
+            return (xc, aux_c, pool_c), ys
 
         if cfg.remat != "none":
             policy = (
@@ -290,12 +345,15 @@ def forward(
             )
             body = jax.checkpoint(body, policy=policy, prevent_cse=False)
 
-        xs = (seg_p, seg_cache, jnp.arange(n))
-        (x, aux_losses), (seg_new_cache, cap) = maybe_scan(
-            body, (x, aux_losses), xs, n, cfg.scan_unroll
+        xs = (seg_p, seg_state, jnp.arange(n))
+        (x, aux_losses, seg_pool), (seg_new_cache, cap) = maybe_scan(
+            body, (x, aux_losses, seg_pool), xs, n, cfg.scan_unroll
         )
         if seg_cache is not None:
-            new_cache[f"seg{i}"] = seg_new_cache
+            new_cache[f"seg{i}"] = (
+                _merge_cache(seg_pool, seg_new_cache)
+                if seg_pool is not None else seg_new_cache
+            )
         if cap:
             if "moe_drop_frac" in cap:
                 aux_metrics[f"seg{i}_moe_drop_frac"] = cap["moe_drop_frac"].mean()

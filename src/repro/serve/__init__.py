@@ -1,6 +1,7 @@
 from repro.serve.engine import (
     cache_axes,
     make_decode_step,
+    make_paged_decode_step,
     make_prefill_step,
     make_slot_decode_step,
     make_slot_prefill,
@@ -11,6 +12,7 @@ from repro.serve.paged_cache import (
     PoolExhausted,
     PoolSpec,
     blocks_for,
+    pow2_bucket,
 )
 from repro.serve.request import Request, RequestStatus, aggregate_metrics
 from repro.serve.sampler import sample
@@ -31,9 +33,11 @@ __all__ = [
     "blocks_for",
     "cache_axes",
     "make_decode_step",
+    "make_paged_decode_step",
     "make_prefill_step",
     "make_slot_decode_step",
     "make_slot_prefill",
+    "pow2_bucket",
     "run_static",
     "sample",
 ]

@@ -87,6 +87,55 @@ def make_decode_step(
 # ``[n_layers, batch, ...]`` (batch axis 1), hence ``in_axes=1``.
 
 
+def make_paged_decode_step(
+    cfg: ModelConfig,
+    collector: Collector = NULL_COLLECTOR,
+    *,
+    block_size: int,
+    paged_flags: Any,
+    impl: str = "auto",
+) -> Callable:
+    """Returns ``step(params, pool, tables [S, M], tokens [S], pos [S]) ->
+    (pool, logits [S, V], captures)`` — one batched decode over all slots
+    straight against the physical block pool.
+
+    Replaces the gathered path's ``gather -> vmap(B=1) -> scatter_decode``
+    round trip: slots ride the batch axis of a single ``lm.forward`` call
+    with per-slot positions, attention leaves dispatch to the paged-attention
+    kernel (in-place pool block writes, block-table walk, O(kv_len) traffic),
+    and slot-state leaves (rwkv/griffin recurrent state) use their dense
+    per-slot pool storage directly.  ``paged_flags`` is the pool's leaf-kind
+    tree (``PagedKVCache.paged``): pool leaves thread ``lm.forward``'s scan
+    carry and are updated in place (donate the pool at the jit boundary!),
+    so per-step cost is O(live kv_len), not O(pool).  ``tables`` may be
+    sliced to the live block high-water mark; each distinct width compiles
+    once.
+
+    Captures surface with the slot axis leading (batched, not vmap-stacked),
+    so per-position probe *reductions* see all slots at once — deep MegaScope
+    probing should prefer the gathered path (``decode_path="gathered"``).
+    """
+    if cfg.input_kind != "tokens":
+        raise ValueError(f"{cfg.name}: continuous batching serves token archs")
+    if cfg.use_mla:
+        raise ValueError(f"{cfg.name}: MLA decodes via the gathered path")
+    from repro.kernels.paged_attention.ops import PagedInfo
+    from repro.models import layers as L
+    from repro.models import lm
+
+    def step(params, pool, tables, tokens, pos):
+        paged = PagedInfo(tables=tables, block_size=block_size, impl=impl)
+        hidden, new_pool, aux = lm.forward(
+            cfg, params, {"tokens": tokens[:, None]},
+            cache=pool, cache_pos=pos, paged=paged,
+            paged_flags=paged_flags, collector=collector,
+        )
+        logits = L.logits_fn(params, cfg, hidden)[:, 0]
+        return new_pool, logits, aux.get("captures", {})
+
+    return step
+
+
 def make_slot_decode_step(cfg: ModelConfig, collector: Collector = NULL_COLLECTOR) -> Callable:
     """Returns ``step(params, dense_cache, tokens [S], pos [S]) ->
     (dense_cache, logits [S, V], captures)`` with per-slot positions.
@@ -119,26 +168,30 @@ def make_slot_decode_step(cfg: ModelConfig, collector: Collector = NULL_COLLECTO
 
 
 def make_slot_prefill(cfg: ModelConfig, collector: Collector = NULL_COLLECTOR) -> Callable:
-    """Returns ``prefill(params, tokens [1, P], cache_len) ->
+    """Returns ``prefill(params, tokens [1, P], n_real, cache_len) ->
     (filled_cache, last_logits [V], captures)``.
 
-    The prompt runs at its exact length (recurrent-state families integrate
-    every position, so right-padding would corrupt rwkv/griffin state); only
-    the cache is rounded up to a block multiple by the caller via
-    ``cache_len``.
+    ``tokens`` may be right-padded to ``P >= n_real`` for attention-only
+    families (the causal mask keeps real positions blind to pad garbage, and
+    pad K/V land beyond ``kv_len`` where decode masks them); the logits are
+    taken at ``n_real - 1`` regardless.  Recurrent-state families integrate
+    every position, so their callers must pass exact-length prompts
+    (``P == n_real``).  The cache is rounded up to a block multiple by the
+    caller via ``cache_len``.
     """
     if cfg.input_kind != "tokens":
         raise ValueError(f"{cfg.name}: continuous batching serves token archs")
     from repro.models import layers as L
     from repro.models import lm
 
-    def prefill(params, tokens, cache_len: int):
+    def prefill(params, tokens, n_real, cache_len: int):
         cache = lm.init_cache(cfg, 1, cache_len)
         hidden, new_cache, aux = lm.forward(
             cfg, params, {"tokens": tokens},
             cache=cache, cache_pos=jnp.int32(0), collector=collector,
         )
-        logits = L.logits_fn(params, cfg, hidden[:, -1:, :])[0, 0]
+        last = jax.lax.dynamic_slice_in_dim(hidden, n_real - 1, 1, axis=1)
+        logits = L.logits_fn(params, cfg, last)[0, 0]
         return new_cache, logits, aux.get("captures", {})
 
     return prefill

@@ -23,9 +23,16 @@ point at it, so the decode-path scatter of inactive slots lands there
 harmlessly and gathered positions beyond a slot's ``kv_len`` are masked out
 by attention anyway.
 
-The decode path is gather -> step -> scatter-touched-block: one decode step
-writes a single position per slot, so only the block containing that position
-goes back to the pool.
+Two decode paths share this pool (``server.ServeConfig.decode_path``):
+
+* **paged** (default): no dense view is ever built — the paged-attention
+  kernel walks each slot's block table directly against the pool and the new
+  token's K/V are written in place into the owning block
+  (``layers.gqa_apply`` paged branch / ``engine.make_paged_decode_step``);
+* **gathered** (the correctness oracle, and the MegaScope deep-probe path):
+  gather -> step -> scatter-touched-block — one decode step writes a single
+  position per slot, so only the block containing that position goes back to
+  the pool.
 """
 
 from __future__ import annotations
@@ -94,6 +101,13 @@ def blocks_for(n_tokens: int, block_size: int) -> int:
     return -(-n_tokens // block_size)
 
 
+def pow2_bucket(n: int) -> int:
+    """Smallest power of two >= ``n`` — the jit-compile-cache bucketing used
+    for prefill cache lengths and the decode-table high-water mark, so the
+    number of compiled shapes stays O(log max_len) under Poisson workloads."""
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
 @dataclass(frozen=True)
 class PoolSpec:
     num_slots: int
@@ -113,7 +127,13 @@ class PagedKVCache:
     pool (take + return it) so the server can fold them into jitted steps.
     """
 
-    def __init__(self, cfg: ModelConfig, spec: PoolSpec):
+    def __init__(self, cfg: ModelConfig, spec: PoolSpec, *,
+                 promote_store: bool = False):
+        """``promote_store`` widens bfloat16 *paged* leaves to float32
+        containers (values are still quantized through bfloat16 on every
+        write, so numerics are bit-identical to a bf16 pool).  The in-place
+        paged decode path needs this on CPU: XLA CPU cannot alias bf16
+        scatters, so a bf16 pool would silently copy itself every step."""
         self.cfg = cfg
         self.spec = spec
         L = spec.max_len
@@ -135,11 +155,14 @@ class PagedKVCache:
         def make_pool(leaf, paged):
             n = leaf.shape[0]
             feat = leaf.shape[3:] if paged else leaf.shape[2:]
+            dtype = leaf.dtype
+            if paged and promote_store and dtype == jnp.bfloat16:
+                dtype = jnp.float32
             if paged:
                 shape = (n, spec.num_blocks, spec.block_size, *feat)
             else:
                 shape = (n, spec.num_slots, *feat)
-            return jnp.zeros(shape, leaf.dtype)
+            return jnp.zeros(shape, dtype)
 
         self.pool = jax.tree.map(make_pool, template, self.paged)
 

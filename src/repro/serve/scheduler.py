@@ -36,6 +36,12 @@ class ServeConfig:
     num_blocks: int = 65           # physical blocks incl. the reserved null
     max_blocks_per_slot: int = 16  # block-table width; max_len = this * bs
     max_prefills_per_step: int = 1 # prefill/decode interleaving bound
+    # decode engine: "paged" streams KV blocks straight from the pool (no
+    # dense gather, in-place block writes); "gathered" is the original
+    # gather -> vmap(B=1) -> scatter oracle; "auto" picks paged whenever the
+    # family supports it and no MegaScope collector needs per-slot captures
+    decode_path: str = "auto"      # auto | paged | gathered
+    paged_attn_impl: str = "auto"  # auto | xla | pallas | pallas_interpret
 
     @property
     def max_len(self) -> int:

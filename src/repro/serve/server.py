@@ -33,11 +33,12 @@ from repro.models import get_model
 from repro.models.hooks import Collector, NULL_COLLECTOR
 from repro.serve.engine import (
     make_decode_step,
+    make_paged_decode_step,
     make_prefill_step,
     make_slot_decode_step,
     make_slot_prefill,
 )
-from repro.serve.paged_cache import PagedKVCache, PoolSpec, blocks_for
+from repro.serve.paged_cache import PagedKVCache, PoolSpec, blocks_for, pow2_bucket
 from repro.serve.request import Request, RequestStatus, aggregate_metrics
 from repro.serve.sampler import sample
 from repro.serve.scheduler import Scheduler, ServeConfig
@@ -74,15 +75,6 @@ class MegaServe:
         self.serve_cfg = serve_cfg
         self.params = params
         self.sched = Scheduler(serve_cfg)
-        self.kv = PagedKVCache(cfg, PoolSpec(
-            num_slots=serve_cfg.num_slots,
-            num_blocks=serve_cfg.num_blocks,
-            block_size=serve_cfg.block_size,
-            max_blocks=serve_cfg.max_blocks_per_slot,
-        ))
-        # take ownership of the pool buffers; keeping them referenced from
-        # self.kv too would pin a second full KV pool in device memory
-        self.pool, self.kv.pool = self.kv.pool, None
         self.tracer = tracer or Tracer(rank=0, enabled=True)
         self.collector = collector
         self._capture = collector is not NULL_COLLECTOR
@@ -95,18 +87,69 @@ class MegaServe:
         self._base = self._raw_clock()
         self._clock = lambda: self._raw_clock() - self._base
 
-        slot_step = make_slot_decode_step(cfg, collector)
+        # decode-path selection: the paged kernel needs gqa-style k/v leaves
+        # (MLA's latent cache has no head axis to walk), and deep MegaScope
+        # probing wants the vmapped per-slot capture semantics of the oracle
+        paged_ok = not cfg.use_mla
+        path = serve_cfg.decode_path
+        if path == "auto":
+            path = "paged" if paged_ok and not self._capture else "gathered"
+        elif path == "paged" and not paged_ok:
+            raise ValueError(f"{cfg.name}: decode_path='paged' unsupported (MLA)")
+        elif path not in ("paged", "gathered"):
+            raise ValueError(f"unknown decode_path {serve_cfg.decode_path!r}")
+        self.decode_path = path
 
-        def decode_fn(params, pool, tables, tokens, pos):
-            dense = self.kv.gather(pool, tables)
-            new_dense, logits, caps = slot_step(params, dense, tokens, pos)
-            pool = self.kv.scatter_decode(pool, new_dense, tables, pos)
-            return pool, jnp.argmax(logits, -1), caps
+        self.kv = PagedKVCache(
+            cfg,
+            PoolSpec(
+                num_slots=serve_cfg.num_slots,
+                num_blocks=serve_cfg.num_blocks,
+                block_size=serve_cfg.block_size,
+                max_blocks=serve_cfg.max_blocks_per_slot,
+            ),
+            # XLA CPU cannot alias bf16 scatters: the paged path's in-place
+            # pool writes would silently degrade to full-pool copies
+            promote_store=(
+                path == "paged" and jax.default_backend() == "cpu"
+            ),
+        )
+        # take ownership of the pool buffers; keeping them referenced from
+        # self.kv too would pin a second full KV pool in device memory
+        self.pool, self.kv.pool = self.kv.pool, None
 
-        self._decode = jax.jit(decode_fn) if use_jit else decode_fn
+        if path == "paged":
+            paged_step = make_paged_decode_step(
+                cfg, collector, block_size=serve_cfg.block_size,
+                paged_flags=self.kv.paged, impl=serve_cfg.paged_attn_impl,
+            )
+
+            def decode_fn(params, pool, tables, tokens, pos):
+                pool, logits, caps = paged_step(params, pool, tables, tokens, pos)
+                return pool, jnp.argmax(logits, -1), caps
+        else:
+            slot_step = make_slot_decode_step(cfg, collector)
+
+            def decode_fn(params, pool, tables, tokens, pos):
+                dense = self.kv.gather(pool, tables)
+                new_dense, logits, caps = slot_step(params, dense, tokens, pos)
+                pool = self.kv.scatter_decode(pool, new_dense, tables, pos)
+                return pool, jnp.argmax(logits, -1), caps
+
+        # donate the pool: it is the largest buffer in the program and every
+        # step rewrites it, so double-buffering it would waste a full KV pool
+        self._decode = (
+            jax.jit(decode_fn, donate_argnums=(1,)) if use_jit else decode_fn
+        )
         self._slot_prefill = make_slot_prefill(cfg, collector)
         self._prefill_cache: dict[int, Callable] = {}
         self._use_jit = use_jit
+        # right-pad prompts to power-of-two block buckets when every cache
+        # leaf is attention-paged (causal masking keeps pad positions
+        # invisible); recurrent-state families integrate every position, so
+        # they compile per exact prompt length instead
+        leaves = jax.tree.leaves(self.kv.paged)
+        self._pad_prefill = bool(leaves) and all(leaves)
 
     # -------------------------------------------------------------- intake
     def submit(
@@ -129,20 +172,38 @@ class MegaServe:
         return rid
 
     # ------------------------------------------------------------ prefill
+    def _prefill_blocks(self, n_tokens: int) -> int:
+        """Block count the prefill executable for ``n_tokens`` covers: the
+        exact count for state families, a power-of-two bucket (capped at the
+        table width) for attention-only families — bounding the jit compile
+        cache at O(log max_len) entries even under preemption-recompute
+        prompts of arbitrary length."""
+        n_blk = blocks_for(n_tokens, self.serve_cfg.block_size)
+        if not self._pad_prefill:
+            return n_blk
+        return min(pow2_bucket(n_blk), self.serve_cfg.max_blocks_per_slot)
+
     def _prefill_for(self, n_tokens: int) -> Callable:
-        fn = self._prefill_cache.get(n_tokens)
+        bs = self.serve_cfg.block_size
+        n_blk = self._prefill_blocks(n_tokens)
+        key = n_blk if self._pad_prefill else n_tokens
+        fn = self._prefill_cache.get(key)
         if fn is not None:
             return fn
-        bs = self.serve_cfg.block_size
-        cache_len = blocks_for(n_tokens, bs) * bs
+        cache_len = n_blk * bs
 
-        def prefill_fn(params, tokens, pool, slot, phys):
-            filled, logits, caps = self._slot_prefill(params, tokens, cache_len)
+        def prefill_fn(params, tokens, n_real, pool, slot, phys):
+            filled, logits, caps = self._slot_prefill(
+                params, tokens, n_real, cache_len
+            )
             pool = self.kv.scatter_prefill(pool, filled, slot, phys)
             return pool, jnp.argmax(logits, -1), caps
 
-        fn = jax.jit(prefill_fn) if self._use_jit else prefill_fn
-        self._prefill_cache[n_tokens] = fn
+        fn = (
+            jax.jit(prefill_fn, donate_argnums=(3,))
+            if self._use_jit else prefill_fn
+        )
+        self._prefill_cache[key] = fn
         return fn
 
     # --------------------------------------------------------------- step
@@ -152,17 +213,25 @@ class MegaServe:
         admitted, tokens_out = [], 0
 
         for adm in self.sched.admit(now):
-            req = self.sched.requests[adm.rid]
-            fn = self._prefill_for(len(adm.tokens))
-            tokens = jnp.asarray(adm.tokens, jnp.int32)[None, :]
-            phys = jnp.asarray(adm.phys, jnp.int32)
+            n_real = len(adm.tokens)
+            fn = self._prefill_for(n_real)
+            toks, phys = list(adm.tokens), list(adm.phys)
+            if self._pad_prefill:
+                # right-pad tokens to the bucketed cache length and the block
+                # list to the bucket width with null-block entries (their
+                # garbage K/V land in block 0, which every read masks out)
+                n_blk = self._prefill_blocks(n_real)
+                toks += [0] * (n_blk * self.serve_cfg.block_size - n_real)
+                phys += [0] * (n_blk - len(phys))
+            tokens = jnp.asarray(toks, jnp.int32)[None, :]
             with self.tracer.scope(
                 "prefill", kind="compute", rid=adm.rid, slot=adm.slot,
-                tokens=len(adm.tokens), recompute=adm.is_recompute,
+                tokens=n_real, recompute=adm.is_recompute,
                 step=self.step_idx,
             ):
                 self.pool, tok, caps = fn(
-                    self.params, tokens, self.pool, adm.slot, phys
+                    self.params, tokens, jnp.int32(n_real), self.pool,
+                    adm.slot, jnp.asarray(phys, jnp.int32),
                 )
                 tok = jax.block_until_ready(tok)
             now = self._clock()
@@ -180,7 +249,18 @@ class MegaServe:
         if active:
             toks = jnp.asarray(self.sched.last_tok, jnp.int32)
             pos = jnp.asarray(self.sched.pos, jnp.int32)
-            tables = jnp.asarray(self.sched.tables)
+            if self.decode_path == "paged":
+                # slice the tables to the live-block high-water mark (next
+                # power of two): the kernel's sweep — and the XLA fallback's
+                # gather — then cost O(max live kv_len), not O(pool max_len);
+                # bucketing keeps the compile cache at O(log max_blocks)
+                live = max(
+                    (len(self.sched.blocks[s]) for s in active), default=1
+                )
+                hb = min(pow2_bucket(live), self.serve_cfg.max_blocks_per_slot)
+                tables = jnp.asarray(self.sched.tables[:, :hb])
+            else:
+                tables = jnp.asarray(self.sched.tables)
             with self.tracer.scope(
                 "decode", kind="compute", step=self.step_idx,
                 active=len(active), tokens=len(active),
@@ -193,7 +273,8 @@ class MegaServe:
             next_tok = np.asarray(next_tok)
             for s in active:
                 self.sched.advance(s)
-                self._emit(s, int(next_tok[s]), caps, slot_axis=True)
+                self._emit(s, int(next_tok[s]), caps,
+                           slot_axis=(self.decode_path == "gathered"))
                 self.sched.record_token(s, int(next_tok[s]), now)
                 tokens_out += 1
 
@@ -212,6 +293,12 @@ class MegaServe:
         rid = self.sched.slots[slot]
         captures = {}
         if self._capture and caps:
+            # slot_axis is only set on the gathered path, where vmap stacks
+            # *every* capture leaf over the slot axis, so slicing is exact.
+            # The batched paged step offers no such guarantee (probe
+            # reductions may collapse the axis entirely), so its captures
+            # attach whole — deep per-slot probing should use
+            # decode_path="gathered" (what "auto" picks under a collector).
             take = (lambda a: np.asarray(a[slot])) if slot_axis else np.asarray
             captures = jax.tree.map(take, caps)
         self.streams[rid].append(StreamItem(self.step_idx, tok, captures))
