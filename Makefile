@@ -1,13 +1,17 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test ci bench-serve deps deps-dev
+.PHONY: test ci bench-serve docs-check deps deps-dev
 
 # tier-1 verification
 test:
 	python -m pytest -x -q
 
-ci: test
+# execute every fenced python block in docs/*.md (CPU-safe) so docs can't rot
+docs-check:
+	python tools/docs_check.py
+
+ci: test docs-check
 
 # decode-latency-vs-max_len sweep (paged vs gathered) + continuous-vs-static;
 # persists the perf trajectory to BENCH_serve.json

@@ -13,7 +13,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.scope.collector import ScopeCollector
-from repro.models import get_model
+from repro.models import layers as L
+from repro.models import lm
 
 
 @dataclass
@@ -26,6 +27,19 @@ class GenerationRecord:
     captures: dict[str, Any] = field(default_factory=dict)
 
 
+def _flat_captures(aux: dict) -> dict[str, Any]:
+    """Flatten ``lm.forward``'s aux captures (grouped by segment, with
+    scanned-layer leaves stacked over a leading layer axis) into the flat
+    ``{"tag.compress": value}`` record layout.  Most models have one segment,
+    so keys are plain; when a later segment repeats a key, that occurrence is
+    disambiguated with its segment prefix (``"seg1/tag.compress"``)."""
+    out: dict[str, Any] = {}
+    for seg, caps in aux.get("captures", {}).items():
+        for k, v in caps.items():
+            out[k if k not in out else f"{seg}/{k}"] = v
+    return out
+
+
 def generate_with_scope(
     cfg: ModelConfig,
     params,
@@ -34,21 +48,29 @@ def generate_with_scope(
     scope: ScopeCollector | None = None,
     top_k: int = 8,
 ) -> tuple[list[GenerationRecord], jax.Array]:
-    model = get_model(cfg)
+    if cfg.input_kind != "tokens":
+        raise ValueError(f"{cfg.name}: generate_with_scope serves token archs")
     B, S = prompt_tokens.shape
-    cache = model.init_cache(cfg, B, S + n_steps)
+    cache = lm.init_cache(cfg, B, S + n_steps)
     scope = scope or ScopeCollector()
 
-    cache, logits = model.prefill(
-        cfg, params, {"tokens": prompt_tokens}, cache, scope
+    # lm.forward is called directly (not through model.prefill/decode_step)
+    # because probe captures ride its aux: tags inside the layer scan can
+    # only escape through scan ys, which the thin wrappers discard
+    hidden, cache, aux = lm.forward(
+        cfg, params, {"tokens": prompt_tokens},
+        cache=cache, cache_pos=jnp.int32(0), collector=scope,
     )
+    logits = L.logits_fn(params, cfg, hidden[:, -1:, :])[:, 0]
     records: list[GenerationRecord] = []
     toks = []
     tok = jnp.argmax(logits, -1)
     for i in range(n_steps):
         probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
         tk_p, tk_i = jax.lax.top_k(probs[0], top_k)
-        captures = jax.tree.map(np.asarray, scope.drain())
+        captures = jax.tree.map(
+            np.asarray, {**_flat_captures(aux), **scope.drain()}
+        )
         records.append(GenerationRecord(
             step=i,
             token=int(tok[0]),
@@ -58,7 +80,9 @@ def generate_with_scope(
             captures=captures,
         ))
         toks.append(tok)
-        cache, logits = model.decode_step(
-            cfg, params, cache, tok, jnp.int32(S + i), scope
+        hidden, cache, aux = lm.forward(
+            cfg, params, {"tokens": tok.reshape(-1, 1)},
+            cache=cache, cache_pos=jnp.int32(S + i), collector=scope,
         )
+        logits = L.logits_fn(params, cfg, hidden)[:, 0]
     return records, jnp.stack(toks, axis=1)

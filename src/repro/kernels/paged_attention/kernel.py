@@ -1,14 +1,14 @@
 """Paged-attention decode Pallas TPU kernel (block-table walk, no gather).
 
-Single-token decode attention for ``S`` serving slots directly against the
-physical KV block pool: no dense ``[S, max_len, ...]`` view is ever
-materialized.  Layout:
+Decode attention for ``S`` serving slots directly against the physical KV
+block pool: no dense ``[S, max_len, ...]`` view is ever materialized.  Layout:
 
-    q       [S, H, dh]            one query token per slot
+    q       [S, H, dh] or [S, Q, H, dh]   Q query tokens per slot (Q > 1 is
+                                          the speculative-decoding verify step)
     k_pool  [(n_layers,) num_blocks, bs, K, dh]   the physical pool
     v_pool  [(n_layers,) num_blocks, bs, K, dv]   (see PagedKVCache)
     tables  [S, M] int32          per-slot block tables (padding -> null 0)
-    kv_len  [S] int32             live positions per slot (incl. this token)
+    kv_len  [S] int32             live positions per slot (incl. all Q tokens)
     layer   scalar int32          pool layer for the 5-D layer-stacked layout
                                   (rides scalar prefetch into the index maps,
                                   so the stacked pool is never sliced in HBM)
@@ -20,21 +20,28 @@ Grid ``(slot, table-entry)`` with the table walk innermost/sequential; the
 physical block out of the pool.  All KV heads of a block are fetched in one
 block (grid iterates table entries, not kv-heads: each block is touched once
 per slot instead of once per head) and the GQA head arithmetic happens
-in-register on the ``[K, G, dh]`` reshaped query.
+in-register on the ``[Q, K, G, dh]`` reshaped query.  The Q query rows share
+every fetched K/V block: multi-token verification costs the same HBM traffic
+as single-token decode.
 
 Online softmax state (running max / denominator / unnormalized accumulator)
 lives in revisited output blocks whose index maps ignore ``j`` — VMEM-resident
 across the sweep, normalized in place on the last step (the same pattern as
 ``flash_attention``).
 
+Causal masking inside the query block: query ``i`` (0-based of Q) sits at
+absolute position ``kv_len - Q + i`` and attends keys
+``< kv_len - (Q - 1 - i)``; the window low bound shifts per query the same
+way.  At Q = 1 both collapse to the plain decode masks.
+
 Early exit: entries at or past a slot's last live block — and, for windowed
-attention, entries wholly before the window's reach — contribute nothing:
-``pl.when`` skips their compute *and* the index map clamps onto the live
-range so the pipeline re-fetches a resident block instead of streaming dead
-pool blocks.  Per-slot HBM traffic is therefore O(kv_len) (O(window) for
-windowed families), not O(max_len); the caller is still free to slice
-``tables`` down to the live-block high-water mark so the grid itself shrinks
-too.
+attention, entries wholly before the *oldest* query's window reach —
+contribute nothing: ``pl.when`` skips their compute *and* the index map clamps
+onto the live range so the pipeline re-fetches a resident block instead of
+streaming dead pool blocks.  Per-slot HBM traffic is therefore O(kv_len)
+(O(window + Q) for windowed families), not O(max_len); the caller is still
+free to slice ``tables`` down to the live-block high-water mark so the grid
+itself shrinks too.
 
 (The pool keeps the model's trailing ``[K, dh]`` feature layout, so a K/V
 block tile is ``(bs, K, dh)`` with the small kv-head dim second-to-last —
@@ -56,10 +63,10 @@ NEG = -1e30
 
 def _paged_kernel(
     tbl_ref, len_ref, lay_ref,     # scalar-prefetch: tables [S,M], kv_len [S],
-    q_ref, k_ref, v_ref,           #   layer [1]; then q [1, H, dh] and the
+    q_ref, k_ref, v_ref,           #   layer [1]; then q [1, Q*H, dh] and the
     o_ref, m_ref, l_ref,           #   K/V blocks [1, 1, bs, K, d*]; outputs
     *, scale: float, window: int | None, block_size: int,
-    n_kv: int, q_per_kv: int,
+    n_kv: int, q_per_kv: int, q_len: int,
 ):
     s = pl.program_id(0)
     j = pl.program_id(1)
@@ -72,48 +79,52 @@ def _paged_kernel(
         o_ref[...] = jnp.zeros_like(o_ref)
 
     kvl = len_ref[s]
-    K, G = n_kv, q_per_kv
+    K, G, Q = n_kv, q_per_kv, q_len
 
     # early exit: skip table entries past the last live position, and — for
-    # windowed attention — entries wholly before the window's reach
+    # windowed attention — entries wholly before the oldest query's reach
     live = j * block_size < kvl
     if window is not None:
-        live &= j * block_size + block_size > kvl - window
+        live &= j * block_size + block_size > kvl - (Q - 1) - window
 
     @pl.when(live)
     def _accumulate():
-        q = q_ref[0].astype(jnp.float32).reshape(K, G, -1)
+        q = q_ref[0].astype(jnp.float32).reshape(Q, K, G, -1)
         kb = k_ref[0, 0].astype(jnp.float32)                 # [bs, K, dh]
         vb = v_ref[0, 0].astype(jnp.float32)                 # [bs, K, dv]
         sc = jnp.einsum(
-            "kgd,bkd->kgb", q, kb, preferred_element_type=jnp.float32
-        ) * scale                                            # [K, G, bs]
+            "qkgd,bkd->qkgb", q, kb, preferred_element_type=jnp.float32
+        ) * scale                                            # [Q, K, G, bs]
 
         pos = j * block_size + jax.lax.broadcasted_iota(
-            jnp.int32, (1, 1, block_size), 2
+            jnp.int32, (1, 1, 1, block_size), 3
         )
-        mask = pos < kvl
+        # per-query causal limit: query i attends keys < kvl - (Q - 1 - i)
+        limit = kvl - (Q - 1) + jax.lax.broadcasted_iota(
+            jnp.int32, (Q, 1, 1, 1), 0
+        )
+        mask = pos < limit
         if window is not None:
-            mask &= pos > kvl - 1 - window
+            mask &= pos > limit - 1 - window
         sc = jnp.where(mask, sc, NEG)
 
-        m_prev = m_ref[0].reshape(K, G)
-        l_prev = l_ref[0].reshape(K, G)
+        m_prev = m_ref[0].reshape(Q, K, G)
+        l_prev = l_ref[0].reshape(Q, K, G)
         m_new = jnp.maximum(m_prev, sc.max(-1))
         corr = jnp.exp(m_prev - m_new)
         p = jnp.exp(sc - m_new[..., None])
         p = jnp.where(mask, p, 0.0)
         l_new = l_prev * corr + p.sum(-1)
-        acc = o_ref[0].astype(jnp.float32).reshape(K, G, -1) * corr[..., None]
+        acc = o_ref[0].astype(jnp.float32).reshape(Q, K, G, -1) * corr[..., None]
         acc = acc + jnp.einsum(
-            "kgb,bkv->kgv", p, vb, preferred_element_type=jnp.float32
+            "qkgb,bkv->qkgv", p, vb, preferred_element_type=jnp.float32
         )
-        m_ref[0] = m_new.reshape(K * G)
-        l_ref[0] = l_new.reshape(K * G)
+        m_ref[0] = m_new.reshape(Q * K * G)
+        l_ref[0] = l_new.reshape(Q * K * G)
         # o_ref is f32: re-quantizing the running accumulator through the
         # model dtype every block step would compound bf16 rounding over
         # long kv_lens and drift off the gathered-dense oracle
-        o_ref[0] = acc.reshape(K * G, -1)
+        o_ref[0] = acc.reshape(Q * K * G, -1)
 
     @pl.when(j == nj - 1)
     def _normalize():
@@ -126,7 +137,7 @@ def _paged_kernel(
     jax.jit, static_argnames=("scale", "window", "interpret")
 )
 def paged_attention_pallas(
-    q: jax.Array,        # [S, H, dh]
+    q: jax.Array,        # [S, H, dh] or [S, Q, H, dh]
     k_pool: jax.Array,   # [(n,) num_blocks, bs, K, dh]
     v_pool: jax.Array,   # [(n,) num_blocks, bs, K, dv]
     tables: jax.Array,   # [S, M] int32
@@ -137,7 +148,10 @@ def paged_attention_pallas(
     interpret: bool = False,
     layer: jax.Array | None = None,  # indexes layer-stacked 5-D pools
 ) -> jax.Array:
-    S, H, dh = q.shape
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, None]
+    S, Q, H, dh = q.shape
     if k_pool.ndim == 4:  # single-layer pool: lift to the stacked layout
         k_pool, v_pool = k_pool[None], v_pool[None]
         layer = jnp.zeros((), jnp.int32)
@@ -148,6 +162,9 @@ def paged_attention_pallas(
     tables = tables.astype(jnp.int32)
     kv_len = kv_len.astype(jnp.int32)
     lay = jnp.asarray(layer, jnp.int32).reshape(1)
+    # the Q query rows ride the row axis of one block: every fetched K/V
+    # block is scored against all of them at once
+    qf = q.reshape(S, Q * H, dh)
 
     def kv_map(s, j, tbl, kvl, lay):
         # clamp dead entries onto the live range [first, last]: same index as
@@ -157,7 +174,7 @@ def paged_attention_pallas(
         last = jnp.maximum(kvl[s] - 1, 0) // bs
         jj = jnp.minimum(j, last)
         if window is not None:
-            first = jnp.maximum(kvl[s] - window, 0) // bs
+            first = jnp.maximum(kvl[s] - (Q - 1) - window, 0) // bs
             jj = jnp.maximum(jj, jnp.minimum(first, last))
         return (lay[0], tbl[s, jj], 0, 0, 0)
 
@@ -165,27 +182,28 @@ def paged_attention_pallas(
         num_scalar_prefetch=3,
         grid=(S, M),
         in_specs=[
-            pl.BlockSpec((1, H, dh), lambda s, j, tbl, kvl, lay: (s, 0, 0)),
+            pl.BlockSpec((1, Q * H, dh), lambda s, j, tbl, kvl, lay: (s, 0, 0)),
             pl.BlockSpec((1, 1, bs, K, dh), kv_map),
             pl.BlockSpec((1, 1, bs, K, dv), kv_map),
         ],
         out_specs=[
-            pl.BlockSpec((1, H, dv), lambda s, j, tbl, kvl, lay: (s, 0, 0)),
-            pl.BlockSpec((1, H), lambda s, j, tbl, kvl, lay: (s, 0)),
-            pl.BlockSpec((1, H), lambda s, j, tbl, kvl, lay: (s, 0)),
+            pl.BlockSpec((1, Q * H, dv), lambda s, j, tbl, kvl, lay: (s, 0, 0)),
+            pl.BlockSpec((1, Q * H), lambda s, j, tbl, kvl, lay: (s, 0)),
+            pl.BlockSpec((1, Q * H), lambda s, j, tbl, kvl, lay: (s, 0)),
         ],
     )
     out = pl.pallas_call(
         functools.partial(
             _paged_kernel, scale=scale, window=window, block_size=bs,
-            n_kv=K, q_per_kv=G,
+            n_kv=K, q_per_kv=G, q_len=Q,
         ),
         grid_spec=grid_spec,
         out_shape=[
-            jax.ShapeDtypeStruct((S, H, dv), jnp.float32),
-            jax.ShapeDtypeStruct((S, H), jnp.float32),
-            jax.ShapeDtypeStruct((S, H), jnp.float32),
+            jax.ShapeDtypeStruct((S, Q * H, dv), jnp.float32),
+            jax.ShapeDtypeStruct((S, Q * H), jnp.float32),
+            jax.ShapeDtypeStruct((S, Q * H), jnp.float32),
         ],
         interpret=interpret,
-    )(tables, kv_len, lay, q, k_pool, v_pool)
-    return out[0].astype(q.dtype)
+    )(tables, kv_len, lay, qf, k_pool, v_pool)
+    o = out[0].reshape(S, Q, H, dv).astype(q.dtype)
+    return o[:, 0] if squeeze else o

@@ -9,6 +9,7 @@ a gathered dense view.
 
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 
 import jax
@@ -45,12 +46,13 @@ class PagedInfo:
 
 
 def paged_attention(
-    q: jax.Array,        # [S, 1, H, dh] (model decode layout) or [S, H, dh]
+    q: jax.Array,        # [S, Q, H, dh] (model layout; Q > 1 = spec-decode
+                         #   verify) or [S, H, dh] (bare single-token)
     k_pool: jax.Array,   # [(n_layers,) num_blocks, bs, K, dh]
     v_pool: jax.Array,   # [(n_layers,) num_blocks, bs, K, dv]
     *,
     tables: jax.Array,   # [S, M] int32
-    kv_len: jax.Array,   # [S] int32 (live positions incl. the current token)
+    kv_len: jax.Array,   # [S] int32 (live positions incl. all Q new tokens)
     scale: float,
     window: int | None = None,
     impl: str = "auto",
@@ -58,16 +60,10 @@ def paged_attention(
 ) -> jax.Array:
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "xla"
-    squeeze = q.ndim == 4
-    q3 = q[:, 0] if squeeze else q
-    if impl == "xla":
-        o = paged_attention_ref(
-            q3, k_pool, v_pool, tables, kv_len, scale=scale, window=window,
-            layer=layer,
-        )
-    else:
-        o = paged_attention_pallas(
-            q3, k_pool, v_pool, tables, kv_len, scale=scale, window=window,
-            interpret=(impl == "pallas_interpret"), layer=layer,
-        )
-    return o[:, None] if squeeze else o
+    fn = paged_attention_ref if impl == "xla" else functools.partial(
+        paged_attention_pallas, interpret=(impl == "pallas_interpret")
+    )
+    return fn(
+        q, k_pool, v_pool, tables, kv_len, scale=scale, window=window,
+        layer=layer,
+    )

@@ -9,6 +9,13 @@ output is invariant to the table width — which makes this both the interpret-
 mode parity oracle for ``kernel.py`` and the serving fast path on non-TPU
 backends (the caller slices ``tables`` to the live-block high-water mark, so
 cost tracks kv_len, not pool max_len).
+
+``q`` may carry more than one query per slot (``[S, Q, H, dh]``): the
+speculative-decoding verify step scores Q = draft_len + 1 positions per slot
+in one call.  Query ``i`` (0-based) sits at absolute position
+``kv_len - Q + i`` and therefore attends keys ``< kv_len - (Q - 1 - i)`` —
+causal masking *inside* the query block; at Q = 1 this degenerates to the
+plain decode mask.  The window mask shifts per query the same way.
 """
 
 from __future__ import annotations
@@ -20,17 +27,20 @@ NEG = -1e30
 
 
 def paged_attention_ref(
-    q: jax.Array,        # [S, H, dh]
+    q: jax.Array,        # [S, H, dh] or [S, Q, H, dh]
     k_pool: jax.Array,   # [(n,) num_blocks, bs, K, dh]
     v_pool: jax.Array,   # [(n,) num_blocks, bs, K, dv]
     tables: jax.Array,   # [S, M] int32
-    kv_len: jax.Array,   # [S] int32
+    kv_len: jax.Array,   # [S] int32, live positions incl. all Q new tokens
     *,
     scale: float,
     window: int | None = None,
     layer: jax.Array | None = None,  # indexes layer-stacked 5-D pools
 ) -> jax.Array:
-    S, H, dh = q.shape
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, None]
+    S, Q, H, dh = q.shape
     bs, K, dv = v_pool.shape[-3:]
     M = tables.shape[1]
     G = H // K
@@ -45,18 +55,21 @@ def paged_attention_ref(
     k = k.reshape(S, M * bs, K, dh).astype(q.dtype)
     v = v.reshape(S, M * bs, K, dv).astype(q.dtype)
 
-    qg = q.reshape(S, 1, K, G, dh)
+    qg = q.reshape(S, Q, K, G, dh)
     s = jnp.einsum(
         "bskgd,btkd->bskgt", qg, k, preferred_element_type=jnp.float32
-    ) * scale                                              # [S, 1, K, G, T]
-    pos = jnp.arange(M * bs)[None, :]
-    mask = pos < kv_len[:, None]
+    ) * scale                                              # [S, Q, K, G, T]
+    pos = jnp.arange(M * bs)[None, None, :]                # key positions
+    # per-query causal limit: query i attends keys < kv_len - (Q - 1 - i)
+    limit = kv_len[:, None] - (Q - 1 - jnp.arange(Q))[None, :]  # [S, Q]
+    mask = pos < limit[:, :, None]
     if window is not None:
-        mask &= pos > kv_len[:, None] - 1 - window
-    s = jnp.where(mask[:, None, None, None, :], s, NEG)
+        mask &= pos > limit[:, :, None] - 1 - window
+    s = jnp.where(mask[:, :, None, None, :], s, NEG)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum(
         "bskgt,btkd->bskgd", p.astype(v.dtype), v,
         preferred_element_type=jnp.float32,
     )
-    return o.reshape(S, H, dv).astype(q.dtype)
+    o = o.reshape(S, Q, H, dv).astype(q.dtype)
+    return o[:, 0] if squeeze else o

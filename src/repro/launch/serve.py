@@ -32,7 +32,7 @@ from repro.serve.sampler import sample
 def _run_continuous(cfg, args) -> None:
     from dataclasses import replace
 
-    from repro.serve import MegaServe
+    from repro.serve import MegaServe, get_drafter
     from repro.serve.server import make_poisson_workload
 
     m = get_model(cfg)
@@ -45,20 +45,32 @@ def _run_continuous(cfg, args) -> None:
         num_slots=args.slots, block_size=args.block_size,
         num_blocks=args.num_blocks, seed=args.seed,
     )
-    serve_cfg = replace(serve_cfg, decode_path=args.decode_path)
-    srv = MegaServe(cfg, params, serve_cfg)
+    serve_cfg = replace(
+        serve_cfg, decode_path=args.decode_path,
+        spec_decode=args.spec_decode, spec_k=args.spec_k,
+    )
+    drafter = None
+    if args.spec_decode and args.drafter != "ngram":
+        drafter = get_drafter(args.drafter, vocab_size=cfg.vocab_size,
+                              seed=args.seed)
+    srv = MegaServe(cfg, params, serve_cfg, drafter=drafter)
     for s in specs:
         srv.submit(prompts[s.rid], s.max_new, arrival=s.arrival)
     outs = srv.drain()
     met = srv.metrics()
     print(f"arch={cfg.name} continuous slots={args.slots} "
           f"blocks={serve_cfg.num_blocks}x{serve_cfg.block_size} "
-          f"requests={len(specs)} decode_path={srv.decode_path}")
-    for k in ("generated_tokens", "wall_s", "tokens_per_s", "ttft_p50_s",
-              "ttft_p99_s", "latency_p50_s", "latency_p99_s", "preemptions",
-              "steps"):
+          f"requests={len(specs)} decode_path={srv.decode_path}"
+          + (f" spec_k={args.spec_k} drafter={args.drafter}"
+             if args.spec_decode else ""))
+    keys = ["generated_tokens", "wall_s", "tokens_per_s", "ttft_p50_s",
+            "ttft_p99_s", "latency_p50_s", "latency_p99_s", "preemptions",
+            "steps"]
+    if args.spec_decode:
+        keys += ["spec_proposed", "spec_accepted", "spec_accept_rate"]
+    for k in keys:
         v = met[k]
-        print(f"  {k:15s} {v:.4f}" if isinstance(v, float) else f"  {k:15s} {v}")
+        print(f"  {k:16s} {v:.4f}" if isinstance(v, float) else f"  {k:16s} {v}")
     for rid in list(outs)[:2]:
         print(f"  req {rid}: {outs[rid][:12]}...")
 
@@ -86,6 +98,14 @@ def main() -> None:
                     choices=("auto", "paged", "gathered"),
                     help="paged = no-gather block-pool decode (default when "
                          "supported); gathered = dense-view oracle")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="speculative decoding: draft + batched paged "
+                         "verification (attention-only families)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max draft tokens verified per step")
+    ap.add_argument("--drafter", default="ngram",
+                    choices=("ngram", "random"),
+                    help="draft proposer (random = adversarial baseline)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

@@ -483,33 +483,39 @@ def gqa_apply(
     new_cache = None
     if cache is not None and paged is not None:
         # paged decode: cache leaves are the physical pool ``[(n_layers,)
-        # num_blocks, bs, K, dh]`` shared by all slots; the new token's K/V
-        # go *straight into the block owning each slot's write position* (no
-        # dense gather, no block write-back).  Inactive slots sit at pos 0 of
-        # the null block — their writes collide there harmlessly and are
-        # masked by kv_len.  Values quantize through bfloat16 (the lm
-        # attention-cache dtype) even when the pool container is wider: XLA
-        # CPU cannot alias bfloat16 scatters, so such pools store bf16 values
-        # in f32 so the in-place update actually stays in place.
-        assert S == 1, "paged path is single-token decode"
+        # num_blocks, bs, K, dh]`` shared by all slots; the new tokens' K/V
+        # go *straight into the blocks owning each slot's write positions*
+        # (no dense gather, no block write-back).  S > 1 is the speculative-
+        # decoding verify step: S = draft_len + 1 tokens land at consecutive
+        # positions of the same slot.  Inactive slots sit at pos 0 of the
+        # null block — their writes collide there harmlessly and are masked
+        # by kv_len; write positions beyond the table's reach (padded verify
+        # rows near a slot's max_len) are redirected to the null block too,
+        # so clamped gathers can never corrupt a live block.  Values quantize
+        # through bfloat16 (the lm attention-cache dtype) even when the pool
+        # container is wider: XLA CPU cannot alias bfloat16 scatters, so such
+        # pools store bf16 values in f32 so the in-place update actually
+        # stays in place.
         kk = apply_rope(kk, positions, cfg.rope_theta)
         kk = collector.tag("k", kk)
-        pos = positions[:, 0]                       # [B] per-slot positions
+        pos = positions                             # [B, S] write positions
         bs = paged.block_size
-        phys = jnp.take_along_axis(
-            paged.tables, (pos // bs)[:, None], axis=1
-        )[:, 0]                                     # [B] owning pool block
-        k_new = kk[:, 0].astype(jnp.bfloat16).astype(cache["k"].dtype)
-        v_new = vv[:, 0].astype(jnp.bfloat16).astype(cache["v"].dtype)
+        in_reach = pos < paged.tables.shape[1] * bs
+        blk = jnp.where(in_reach, pos // bs, 0)
+        phys = jnp.take_along_axis(paged.tables, blk, axis=1)  # [B, S]
+        phys = jnp.where(in_reach, phys, 0)
+        off = pos % bs
+        k_new = kk.astype(jnp.bfloat16).astype(cache["k"].dtype)
+        v_new = vv.astype(jnp.bfloat16).astype(cache["v"].dtype)
         if paged.layer is None:
-            ck = cache["k"].at[phys, pos % bs].set(k_new)
-            cv = cache["v"].at[phys, pos % bs].set(v_new)
+            ck = cache["k"].at[phys, off].set(k_new)
+            cv = cache["v"].at[phys, off].set(v_new)
         else:  # layer-stacked pools riding lm.forward's scan carry
-            ck = cache["k"].at[paged.layer, phys, pos % bs].set(k_new)
-            cv = cache["v"].at[paged.layer, phys, pos % bs].set(v_new)
+            ck = cache["k"].at[paged.layer, phys, off].set(k_new)
+            cv = cache["v"].at[paged.layer, phys, off].set(v_new)
         new_cache = {"k": ck, "v": cv}
         kf, vf = ck, cv
-        kv_len = pos + 1
+        kv_len = pos[:, -1] + 1                     # incl. all S new tokens
     elif cache is not None:
         # decode / cached path: rope the new K, write kv at cache_pos
         if mrope:

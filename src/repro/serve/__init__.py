@@ -5,6 +5,7 @@ from repro.serve.engine import (
     make_prefill_step,
     make_slot_decode_step,
     make_slot_prefill,
+    make_spec_verify_step,
 )
 from repro.serve.paged_cache import (
     BlockAllocator,
@@ -15,16 +16,20 @@ from repro.serve.paged_cache import (
     pow2_bucket,
 )
 from repro.serve.request import Request, RequestStatus, aggregate_metrics
-from repro.serve.sampler import sample
+from repro.serve.sampler import greedy_verify, rejection_verify, sample
 from repro.serve.scheduler import Scheduler, ServeConfig
 from repro.serve.server import MegaServe, run_static
+from repro.serve.spec import Drafter, NGramDrafter, RandomDrafter, get_drafter
 
 __all__ = [
     "BlockAllocator",
+    "Drafter",
     "MegaServe",
+    "NGramDrafter",
     "PagedKVCache",
     "PoolExhausted",
     "PoolSpec",
+    "RandomDrafter",
     "Request",
     "RequestStatus",
     "Scheduler",
@@ -32,12 +37,16 @@ __all__ = [
     "aggregate_metrics",
     "blocks_for",
     "cache_axes",
+    "get_drafter",
+    "greedy_verify",
     "make_decode_step",
     "make_paged_decode_step",
     "make_prefill_step",
     "make_slot_decode_step",
     "make_slot_prefill",
+    "make_spec_verify_step",
     "pow2_bucket",
+    "rejection_verify",
     "run_static",
     "sample",
 ]

@@ -136,6 +136,56 @@ def make_paged_decode_step(
     return step
 
 
+def make_spec_verify_step(
+    cfg: ModelConfig,
+    collector: Collector = NULL_COLLECTOR,
+    *,
+    block_size: int,
+    paged_flags: Any,
+    impl: str = "auto",
+) -> Callable:
+    """Returns ``step(params, pool, tables [S, M], tokens [S, Q], pos [S]) ->
+    (pool, greedy [S, Q], logits [S, Q, V], captures)`` — the speculative-
+    decoding verification forward: every slot scores Q = draft_len + 1 tokens
+    (its current last token followed by the drafter's proposal, right-padded
+    to the static Q) in ONE batched call against the physical block pool.
+
+    Row ``i`` of ``logits``/``greedy`` is the target model's prediction for
+    the position *after* ``tokens[:, i]``, so row ``i`` verifies draft token
+    ``i + 1`` and the last accepted row supplies the bonus/correction token
+    (see ``sampler.greedy_verify`` / ``sampler.rejection_verify``).  K/V for
+    all Q tokens are written in place at ``pos + i``; the caller commits the
+    accepted prefix by advancing the slot cursor and *rewinds* the rest —
+    rejected writes sit beyond the new ``kv_len``, where every later read
+    masks them and every later write overwrites them before they could ever
+    become live (``Scheduler.trim_blocks``).
+
+    ``Q`` is baked into the compiled executable (one compile per distinct
+    draft length ceiling); padded rows beyond a slot's real draft cost
+    compute but are causally masked for the rows that matter and their
+    writes land in the null block once past the slot's grown table reach.
+    """
+    if cfg.input_kind != "tokens":
+        raise ValueError(f"{cfg.name}: continuous batching serves token archs")
+    if cfg.use_mla:
+        raise ValueError(f"{cfg.name}: MLA decodes via the gathered path")
+    from repro.kernels.paged_attention.ops import PagedInfo
+    from repro.models import layers as L
+    from repro.models import lm
+
+    def step(params, pool, tables, tokens, pos):
+        paged = PagedInfo(tables=tables, block_size=block_size, impl=impl)
+        hidden, new_pool, aux = lm.forward(
+            cfg, params, {"tokens": tokens},
+            cache=pool, cache_pos=pos, paged=paged,
+            paged_flags=paged_flags, collector=collector,
+        )
+        logits = L.logits_fn(params, cfg, hidden)          # [S, Q, V]
+        return new_pool, jnp.argmax(logits, -1), logits, aux.get("captures", {})
+
+    return step
+
+
 def make_slot_decode_step(cfg: ModelConfig, collector: Collector = NULL_COLLECTOR) -> Callable:
     """Returns ``step(params, dense_cache, tokens [S], pos [S]) ->
     (dense_cache, logits [S, V], captures)`` with per-slot positions.

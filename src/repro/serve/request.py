@@ -31,6 +31,13 @@ class Request:
     status: RequestStatus = RequestStatus.WAITING
     generated: list[int] = field(default_factory=list)
     n_preemptions: int = 0
+    # -- speculative decoding (owned by the server's spec loop) -----------
+    draft_len: int = 0                 # current per-request draft budget
+    spec_idle: int = 0                 # steps since speculation shut off
+    spec_miss: int = 0                 # consecutive zero-acceptance verifies
+    spec_backoff: int = 1              # re-probe interval multiplier
+    spec_proposed: int = 0             # draft tokens sent to verification
+    spec_accepted: int = 0             # draft tokens the target accepted
     # timing (server clock; None until the transition happens)
     t_admitted: float | None = None
     t_first_token: float | None = None

@@ -1,9 +1,22 @@
-"""Token sampling: greedy / temperature / top-k."""
+"""Token sampling and speculative-decoding acceptance.
+
+Two halves, matching where each runs:
+
+* ``sample`` — jax, inside the jitted decode step: greedy / temperature /
+  top-k / top-p (nucleus) over a ``[B, V]`` logit batch.
+* ``greedy_verify`` / ``rejection_verify`` — host-side numpy, consumed by the
+  MegaServe scheduler loop after the batched spec-decode verification forward
+  (``engine.make_spec_verify_step``) hands back per-position target
+  predictions.  Greedy acceptance keeps the emitted stream token-identical to
+  non-speculative greedy decoding; rejection sampling preserves the target
+  model's sampling distribution exactly for any (deterministic) drafter.
+"""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def sample(
@@ -12,12 +25,99 @@ def sample(
     *,
     temperature: float = 0.0,
     top_k: int = 0,
+    top_p: float = 0.0,
 ) -> jax.Array:
+    """Sample one token per row.
+
+    ``temperature <= 0`` (or no ``key``) is greedy argmax.  ``top_k > 0``
+    restricts sampling to the k highest logits; ``0 < top_p < 1`` restricts
+    it to the smallest set of tokens whose cumulative probability reaches
+    ``top_p`` (nucleus sampling; the most likely token always survives).
+    Both filters may be combined — top-k applies first.
+    """
     if temperature <= 0.0 or key is None:
         return jnp.argmax(logits, axis=-1)
     logits = logits / temperature
     if top_k > 0:
-        vals, idx = jax.lax.top_k(logits, top_k)
-        choice = jax.random.categorical(key, vals)
-        return jnp.take_along_axis(idx, choice[:, None], axis=-1)[:, 0]
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if 0.0 < top_p < 1.0:
+        sort_idx = jnp.argsort(logits, axis=-1)[..., ::-1]
+        sorted_logits = jnp.take_along_axis(logits, sort_idx, axis=-1)
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        # drop tokens once the mass *before* them already covers top_p, so
+        # the minimal covering set (incl. the argmax) is always kept
+        exceeded = jnp.cumsum(probs, axis=-1) - probs > top_p
+        sorted_logits = jnp.where(exceeded, -jnp.inf, sorted_logits)
+        inv = jnp.argsort(sort_idx, axis=-1)
+        logits = jnp.take_along_axis(sorted_logits, inv, axis=-1)
     return jax.random.categorical(key, logits)
+
+
+# ---------------------------------------------------------------------------
+# Speculative-decoding acceptance (host side)
+# ---------------------------------------------------------------------------
+#
+# The verification forward feeds one slot the token row
+# ``[t_0, d_1, ..., d_k, <pad>...]`` (t_0 = the last committed token, d_i =
+# the drafter's proposals) and returns the target model's prediction for the
+# position after each row entry.  Row ``i`` therefore judges draft token
+# ``d_{i+1}``; the first row whose verdict disagrees supplies the correction,
+# and full acceptance promotes row ``k``'s prediction to a bonus token.
+# Every step emits between 1 and k+1 tokens.
+
+
+def greedy_verify(
+    target: np.ndarray,      # [Q] greedy target predictions (argmax per row)
+    draft: list[int],        # k <= Q - 1 proposed tokens
+) -> tuple[int, list[int]]:
+    """Greedy acceptance: returns ``(n_accepted, emitted)``.
+
+    ``emitted`` is the accepted draft prefix plus one correction/bonus token,
+    so it always holds ``n_accepted + 1`` tokens and exactly reproduces what
+    non-speculative greedy decoding would have generated.
+    """
+    n = 0
+    while n < len(draft) and int(target[n]) == int(draft[n]):
+        n += 1
+    return n, [int(d) for d in draft[:n]] + [int(target[n])]
+
+
+def _renormalize(p: np.ndarray) -> np.ndarray:
+    s = p.sum()
+    if s <= 0.0:  # degenerate row: fall back to uniform
+        return np.full_like(p, 1.0 / len(p))
+    return p / s
+
+
+def rejection_verify(
+    target_probs: np.ndarray,  # [Q, V] target distribution per row
+    draft: list[int],          # k <= Q - 1 proposed tokens
+    rng: np.random.Generator,
+) -> tuple[int, list[int]]:
+    """Rejection-sampling acceptance for a *deterministic* drafter.
+
+    Draft token ``d`` at row ``i`` is accepted with probability
+    ``p_i(d)`` (the proposal places mass 1 on ``d``, so ``min(1, p/q) = p``).
+    On rejection the emitted token is drawn from the residual distribution
+    ``normalize(max(0, p_i - q_i))`` — here ``p_i`` with ``d`` zeroed out —
+    which keeps the marginal distribution of every emitted token exactly the
+    target model's (Leviathan et al., 2023).  Full acceptance samples the
+    bonus token from row ``k``.  Returns ``(n_accepted, emitted)``.
+    """
+    emitted: list[int] = []
+    n = 0
+    for i, d in enumerate(draft):
+        p = np.asarray(target_probs[i], np.float64)
+        if rng.random() < p[int(d)]:
+            emitted.append(int(d))
+            n += 1
+            continue
+        residual = p.copy()
+        residual[int(d)] = 0.0
+        residual = _renormalize(residual)
+        emitted.append(int(rng.choice(len(residual), p=residual)))
+        return n, emitted
+    p = _renormalize(np.asarray(target_probs[len(draft)], np.float64))
+    emitted.append(int(rng.choice(len(p), p=p)))
+    return n, emitted

@@ -31,6 +31,26 @@ from repro.serve.request import Request, RequestStatus
 
 @dataclass(frozen=True)
 class ServeConfig:
+    """Static serving-engine configuration (pool geometry + policy knobs).
+
+    Pool geometry: ``num_slots`` concurrent sequences share ``num_blocks``
+    physical KV blocks of ``block_size`` tokens (block 0 is the reserved
+    null block); ``max_blocks_per_slot`` is the block-table width, so a
+    single sequence can span at most ``max_len = max_blocks_per_slot *
+    block_size`` positions.
+
+    Speculative decoding (``spec_decode=True``): each step a host-side
+    drafter proposes up to ``spec_k`` continuation tokens per request and
+    the target model verifies all slots' drafts in ONE batched
+    ``spec_k + 1``-token forward; accepted prefixes commit in place,
+    rejected suffixes are rewound (``Scheduler.trim_blocks``).  Greedy
+    outputs stay token-identical to non-speculative decoding.  Requires the
+    paged decode path and an attention-only cache family (recurrent
+    slot-state cannot roll back).  Per-request draft lengths adapt to the
+    observed acceptance rate, down to 0 (speculation off for that request,
+    re-probed every ``spec_retry`` steps).
+    """
+
     num_slots: int = 4
     block_size: int = 16
     num_blocks: int = 65           # physical blocks incl. the reserved null
@@ -42,6 +62,12 @@ class ServeConfig:
     # family supports it and no MegaScope collector needs per-slot captures
     decode_path: str = "auto"      # auto | paged | gathered
     paged_attn_impl: str = "auto"  # auto | xla | pallas | pallas_interpret
+    # speculative decoding (draft + batched paged verification)
+    spec_decode: bool = False      # verify spec_k drafts/slot per step
+    spec_k: int = 4                # max draft tokens per request per step
+    spec_ngram_max: int = 4        # prompt-lookup drafter: longest suffix
+    spec_ngram_min: int = 1        #   n-gram tried, shortest accepted
+    spec_retry: int = 16           # steps between draft re-probes at len 0
 
     @property
     def max_len(self) -> int:
@@ -62,6 +88,11 @@ class Admission:
 
 
 class Scheduler:
+    """Host-side serving policy: slot assignment, block accounting, and the
+    admission / capacity / eviction decisions one ``MegaServe.step()`` tick
+    is made of.  Owns the numpy block tables the jitted engine steps read;
+    never touches jax itself (unit-testable without a device)."""
+
     def __init__(self, cfg: ServeConfig):
         self.cfg = cfg
         self.allocator = BlockAllocator(cfg.num_blocks, reserved=1)
@@ -78,6 +109,8 @@ class Scheduler:
 
     # ------------------------------------------------------------- intake
     def submit(self, req: Request) -> None:
+        """Queue a request for admission; rejects requests whose worst-case
+        footprint can never fit a slot (prompt + budget vs table width)."""
         worst = blocks_for(req.prompt_len + req.max_new, self.cfg.block_size)
         if worst > min(self.cfg.usable_blocks, self.cfg.max_blocks_per_slot):
             raise ValueError(
@@ -124,15 +157,19 @@ class Scheduler:
         return out
 
     # ----------------------------------------------------------- capacity
-    def ensure_capacity(self) -> list[int]:
-        """Grow each active slot's block table to cover its next write
-        position, preempting youngest-admitted slots when the pool runs dry.
-        Returns the rids preempted this call."""
+    def ensure_capacity(self, extra: dict[int, int] | None = None) -> list[int]:
+        """Grow each active slot's block table to cover its next ``e`` write
+        positions (``e = extra.get(slot, 1)``; speculative verification
+        writes ``1 + draft_len`` positions at once), preempting
+        youngest-admitted slots when the pool runs dry.  Returns the rids
+        preempted this call."""
         preempted: list[int] = []
         for slot in sorted(self.active_slots(), key=lambda s: self._admit_seq[s]):
             if self.slots[slot] is None:       # victim of an earlier preempt
                 continue
-            while len(self.blocks[slot]) < self.pos[slot] // self.cfg.block_size + 1:
+            e = max(extra.get(slot, 1) if extra else 1, 1)
+            want = (self.pos[slot] + e - 1) // self.cfg.block_size + 1
+            while len(self.blocks[slot]) < want:
                 got = self.allocator.try_alloc(1)
                 if got is not None:
                     b = got[0]
@@ -152,6 +189,9 @@ class Scheduler:
         return preempted
 
     def preempt(self, slot: int) -> int:
+        """Evict a running request: free all its blocks and requeue it at the
+        head of the waiting line with generated tokens folded into the
+        prompt (preemption-by-recompute).  Returns the rid."""
         rid = self.slots[slot]
         assert rid is not None
         req = self.requests[rid]
@@ -175,9 +215,24 @@ class Scheduler:
             req.t_first_token = now
         self.last_tok[slot] = tok
 
-    def advance(self, slot: int) -> None:
-        """One decode step wrote K/V at ``pos``; move the write cursor."""
-        self.pos[slot] += 1
+    def advance(self, slot: int, n: int = 1) -> None:
+        """A decode/verify step wrote K/V at ``pos .. pos + n - 1``; move the
+        write cursor past the committed prefix."""
+        self.pos[slot] += n
+
+    def trim_blocks(self) -> None:
+        """Rewind speculative over-allocation: free each active slot's
+        blocks past the committed high-water mark ``ceil(pos / block_size)``
+        and re-point their table entries at the null block.  Rejected verify
+        writes live only in the freed region or beyond ``kv_len``'s mask, so
+        the freed blocks carry no live data."""
+        for slot in self.active_slots():
+            keep = max(blocks_for(self.pos[slot], self.cfg.block_size), 1)
+            drop = self.blocks[slot][keep:]
+            if drop:
+                self.allocator.free(drop)
+                del self.blocks[slot][keep:]
+                self.tables[slot, keep:] = 0
 
     def evict_finished(self, now: float) -> list[int]:
         out = []

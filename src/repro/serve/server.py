@@ -37,11 +37,13 @@ from repro.serve.engine import (
     make_prefill_step,
     make_slot_decode_step,
     make_slot_prefill,
+    make_spec_verify_step,
 )
 from repro.serve.paged_cache import PagedKVCache, PoolSpec, blocks_for, pow2_bucket
 from repro.serve.request import Request, RequestStatus, aggregate_metrics
-from repro.serve.sampler import sample
+from repro.serve.sampler import greedy_verify, sample
 from repro.serve.scheduler import Scheduler, ServeConfig
+from repro.serve.spec import Drafter, NGramDrafter
 
 
 @dataclass
@@ -60,6 +62,30 @@ class StreamItem:
 
 
 class MegaServe:
+    """Continuous-batching serving front-end: ``submit() / step() / drain()``.
+
+    One ``step()`` is one scheduler tick — admit + prefill arrivals, grow
+    block tables (preempting by recompute when the pool runs dry), run one
+    fused decode (or speculative verify) step over every active slot, evict
+    finished requests.  Greedy decoding is deterministic across all engine
+    paths: paged vs gathered, speculative vs plain, and preemption round
+    trips all produce token-identical streams.
+
+    Construction keyword knobs:
+
+    * ``collector`` — a MegaScope ``Collector``; probe captures attach to
+      each generated token's ``StreamItem`` (deep per-slot probing prefers
+      ``decode_path="gathered"``, which ``"auto"`` selects for you);
+    * ``tracer`` — a MegaScan ``Tracer``; every phase (``prefill``,
+      ``decode``, speculative ``draft``/``verify``/``accept``) emits
+      ``TraceEvent``s consumable by the chrome exporter and analytics;
+    * ``drafter`` — speculative-decoding proposer (``serve.spec.Drafter``);
+      defaults to the n-gram prompt-lookup drafter when
+      ``serve_cfg.spec_decode`` is set;
+    * ``clock`` — injectable time source for deterministic tests/replays;
+    * ``use_jit`` — disable jit for step-through debugging.
+    """
+
     def __init__(
         self,
         cfg: ModelConfig,
@@ -69,6 +95,7 @@ class MegaServe:
         collector: Collector = NULL_COLLECTOR,
         tracer: Tracer | None = None,
         clock: Callable[[], float] | None = None,
+        drafter: Drafter | None = None,
         use_jit: bool = True,
     ):
         self.cfg = cfg
@@ -93,11 +120,21 @@ class MegaServe:
         paged_ok = not cfg.use_mla
         path = serve_cfg.decode_path
         if path == "auto":
-            path = "paged" if paged_ok and not self._capture else "gathered"
-        elif path == "paged" and not paged_ok:
-            raise ValueError(f"{cfg.name}: decode_path='paged' unsupported (MLA)")
+            # speculative verification exists only on the paged path, so a
+            # spec_decode request overrides the collector's gathered bias
+            if serve_cfg.spec_decode:
+                path = "paged"
+            else:
+                path = "paged" if paged_ok and not self._capture else "gathered"
         elif path not in ("paged", "gathered"):
             raise ValueError(f"unknown decode_path {serve_cfg.decode_path!r}")
+        if path == "paged" and not paged_ok:
+            raise ValueError(f"{cfg.name}: decode_path='paged' unsupported (MLA)")
+        if serve_cfg.spec_decode and path != "paged":
+            raise ValueError(
+                "spec_decode requires the paged decode path "
+                f"(got decode_path={serve_cfg.decode_path!r})"
+            )
         self.decode_path = path
 
         self.kv = PagedKVCache(
@@ -141,6 +178,36 @@ class MegaServe:
         self._decode = (
             jax.jit(decode_fn, donate_argnums=(1,)) if use_jit else decode_fn
         )
+
+        # speculative decoding: draft proposer + batched verification step.
+        # Recurrent slot-state (rwkv / griffin rec blocks) integrates every
+        # token into an O(1) state that cannot be rewound to the accepted
+        # prefix, so speculation is limited to attention-only cache families.
+        self._spec_step = None
+        self.drafter = drafter
+        if serve_cfg.spec_decode:
+            leaves = jax.tree.leaves(self.kv.paged)
+            if not (leaves and all(leaves)):
+                raise ValueError(
+                    f"{cfg.name}: spec_decode needs an attention-only KV "
+                    "cache (recurrent slot-state cannot roll back rejected "
+                    "drafts)"
+                )
+            if serve_cfg.spec_k < 1:
+                raise ValueError(f"spec_k must be >= 1, got {serve_cfg.spec_k}")
+            if self.drafter is None:
+                self.drafter = NGramDrafter(
+                    max_ngram=serve_cfg.spec_ngram_max,
+                    min_ngram=serve_cfg.spec_ngram_min,
+                )
+            spec_fn = make_spec_verify_step(
+                cfg, collector, block_size=serve_cfg.block_size,
+                paged_flags=self.kv.paged, impl=serve_cfg.paged_attn_impl,
+            )
+            self._spec_step = (
+                jax.jit(spec_fn, donate_argnums=(1,)) if use_jit else spec_fn
+            )
+
         self._slot_prefill = make_slot_prefill(cfg, collector)
         self._prefill_cache: dict[int, Callable] = {}
         self._use_jit = use_jit
@@ -166,6 +233,7 @@ class MegaServe:
             rid=rid, prompt=list(prompt), max_new=max_new,
             arrival=self._clock() if arrival is None else arrival,
             eos_id=eos_id,
+            draft_len=self.serve_cfg.spec_k if self._spec_step else 0,
         )
         self.sched.submit(req)
         self.streams[rid] = []
@@ -244,39 +312,23 @@ class MegaServe:
         # right away): evict before decode or the slot runs one step past
         # its budget and buries the eos
         finished = self.sched.evict_finished(now)
-        preempted = self.sched.ensure_capacity()
+
+        # speculative drafts are gathered before capacity planning: a slot
+        # about to verify k drafts needs 1 + k write positions covered
+        drafts: dict[int, list[int]] = {}
+        if self._spec_step is not None and self.sched.active_slots():
+            drafts = self._collect_drafts()
+        preempted = self.sched.ensure_capacity(
+            {s: 1 + len(d) for s, d in drafts.items()} if drafts else None
+        )
         active = self.sched.active_slots()
+        drafts = {s: d for s, d in drafts.items() if s in set(active)}
         if active:
-            toks = jnp.asarray(self.sched.last_tok, jnp.int32)
-            pos = jnp.asarray(self.sched.pos, jnp.int32)
-            if self.decode_path == "paged":
-                # slice the tables to the live-block high-water mark (next
-                # power of two): the kernel's sweep — and the XLA fallback's
-                # gather — then cost O(max live kv_len), not O(pool max_len);
-                # bucketing keeps the compile cache at O(log max_blocks)
-                live = max(
-                    (len(self.sched.blocks[s]) for s in active), default=1
-                )
-                hb = min(pow2_bucket(live), self.serve_cfg.max_blocks_per_slot)
-                tables = jnp.asarray(self.sched.tables[:, :hb])
+            if drafts:
+                tokens_out += self._spec_tick(active, drafts)
             else:
-                tables = jnp.asarray(self.sched.tables)
-            with self.tracer.scope(
-                "decode", kind="compute", step=self.step_idx,
-                active=len(active), tokens=len(active),
-            ):
-                self.pool, next_tok, caps = self._decode(
-                    self.params, self.pool, tables, toks, pos
-                )
-                next_tok = jax.block_until_ready(next_tok)
+                tokens_out += self._decode_tick(active)
             now = self._clock()
-            next_tok = np.asarray(next_tok)
-            for s in active:
-                self.sched.advance(s)
-                self._emit(s, int(next_tok[s]), caps,
-                           slot_axis=(self.decode_path == "gathered"))
-                self.sched.record_token(s, int(next_tok[s]), now)
-                tokens_out += 1
 
         finished += self.sched.evict_finished(now)
         if admitted or active:
@@ -288,6 +340,162 @@ class MegaServe:
             "active": len(active),
             "tokens": tokens_out,
         }
+
+    def _live_tables(self, active: list[int]) -> jax.Array:
+        """Block tables for the decode/verify step.  On the paged path they
+        are sliced to the live-block high-water mark (next power of two): the
+        kernel's sweep — and the XLA fallback's gather — then cost O(max live
+        kv_len), not O(pool max_len); bucketing keeps the compile cache at
+        O(log max_blocks)."""
+        if self.decode_path != "paged":
+            return jnp.asarray(self.sched.tables)
+        live = max((len(self.sched.blocks[s]) for s in active), default=1)
+        hb = min(pow2_bucket(live), self.serve_cfg.max_blocks_per_slot)
+        return jnp.asarray(self.sched.tables[:, :hb])
+
+    def _decode_tick(self, active: list[int]) -> int:
+        """One plain fused decode step over every active slot (1 token each)."""
+        toks = jnp.asarray(self.sched.last_tok, jnp.int32)
+        pos = jnp.asarray(self.sched.pos, jnp.int32)
+        tables = self._live_tables(active)
+        with self.tracer.scope(
+            "decode", kind="compute", step=self.step_idx,
+            active=len(active), tokens=len(active),
+        ):
+            self.pool, next_tok, caps = self._decode(
+                self.params, self.pool, tables, toks, pos
+            )
+            next_tok = jax.block_until_ready(next_tok)
+        now = self._clock()
+        next_tok = np.asarray(next_tok)
+        for s in active:
+            self.sched.advance(s)
+            self._emit(s, int(next_tok[s]), caps,
+                       slot_axis=(self.decode_path == "gathered"))
+            self.sched.record_token(s, int(next_tok[s]), now)
+        return len(active)
+
+    # --------------------------------------------------------- speculation
+    def _collect_drafts(self) -> dict[int, list[int]]:
+        """Ask the drafter for proposals, one per active slot.
+
+        Each request's draft budget is its adapted ``draft_len`` capped so
+        the verify writes stay inside the slot's table reach and the
+        request's remaining token budget (drafting past either is pure
+        waste).  Requests whose budget has adapted to 0 re-probe with a
+        1-token draft every ``spec_retry`` steps."""
+        t0 = self._clock()
+        drafts: dict[int, list[int]] = {}
+        proposed = 0
+        for s in self.sched.active_slots():
+            req = self.sched.requests[self.sched.slots[s]]
+            if req.draft_len == 0:
+                # exponential re-probe backoff: a request that keeps failing
+                # its probes gets probed less and less often, so a hostile
+                # workload converges to plain decode throughput
+                req.spec_idle += 1
+                if req.spec_idle >= self.serve_cfg.spec_retry * req.spec_backoff:
+                    req.spec_idle = 0
+                    req.draft_len = 1
+                continue
+            k = min(
+                req.draft_len,
+                self.serve_cfg.spec_k,
+                req.remaining - 1,
+                self.serve_cfg.max_len - self.sched.pos[s] - 1,
+            )
+            if k <= 0:
+                continue
+            # clamp: the Drafter protocol is a user plug point, and a
+            # proposal longer than k would overflow the verify row / the
+            # slot's grown table reach
+            d = list(self.drafter.propose(req.prompt + req.generated, k))[:k]
+            if d:
+                drafts[s] = d
+                proposed += len(d)
+        self.tracer.record(
+            "draft", t0, self._clock() - t0, kind="host",
+            step=self.step_idx, proposed=proposed, slots=len(drafts),
+        )
+        return drafts
+
+    def _spec_tick(self, active: list[int], drafts: dict[int, list[int]]) -> int:
+        """One batched draft-verification step.
+
+        Every active slot rides the same ``Q = spec_k + 1``-token forward:
+        row 0 is its last committed token, rows 1..k its draft, the rest
+        padding (causally invisible to the rows that matter).  Greedy
+        acceptance (``sampler.greedy_verify``) commits the agreeing prefix
+        plus one correction/bonus token per slot — between 1 and ``k + 1``
+        tokens — then the block tables are rewound past the committed
+        high-water mark (``Scheduler.trim_blocks``)."""
+        scfg = self.serve_cfg
+        Q = scfg.spec_k + 1
+        toks = np.zeros((scfg.num_slots, Q), np.int32)
+        for s in active:
+            row = [self.sched.last_tok[s]] + drafts.get(s, [])
+            toks[s, : len(row)] = row
+        pos = jnp.asarray(self.sched.pos, jnp.int32)
+        tables = self._live_tables(active)
+        v0 = self._clock()
+        self.pool, greedy, _logits, caps = self._spec_step(
+            self.params, self.pool, tables, jnp.asarray(toks), pos
+        )
+        greedy = np.asarray(jax.block_until_ready(greedy))
+        now = self._clock()
+        v_dur = now - v0
+        t0 = now
+        emitted_total = accepted_total = 0
+        for s in active:
+            d = drafts.get(s, [])
+            n_acc, emitted = greedy_verify(greedy[s], d)
+            req = self.sched.requests[self.sched.slots[s]]
+            if d:
+                req.spec_proposed += len(d)
+                req.spec_accepted += n_acc
+                accepted_total += n_acc
+                # acceptance-rate adaptation: the verify forward costs the
+                # same whatever the draft length (Q is padded), so any
+                # acceptance at all restores the full budget.  An *isolated*
+                # miss is the signature of a continuation shift — the next
+                # lookup either proposes the new pattern or nothing at all —
+                # so only consecutive zero-acceptance verifies (a drafter
+                # that is systematically wrong) shut speculation off for
+                # this request, with exponentially backed-off re-probes:
+                # each wasted verify is a plain decode step at multi-token
+                # price, so a hostile workload must degrade to plain decode
+                if n_acc > 0:
+                    req.draft_len = scfg.spec_k
+                    req.spec_miss = 0
+                    req.spec_backoff = 1
+                else:
+                    req.spec_miss += 1
+                    if req.spec_miss >= 3:
+                        req.draft_len = 0
+                        req.spec_backoff = min(req.spec_backoff * 2, 16)
+            n_commit = 0
+            for t in emitted[: req.remaining]:
+                n_commit += 1
+                self._emit(s, int(t), caps, slot_axis=False)
+                self.sched.record_token(s, int(t), now)
+                if req.eos_id is not None and int(t) == req.eos_id:
+                    break
+            self.sched.advance(s, n_commit)
+            emitted_total += n_commit
+        self.sched.trim_blocks()
+        # the verify event is recorded after acceptance so it can carry the
+        # realized token count (the scope context manager freezes args at
+        # entry); ts/dur still bracket exactly the jitted verification
+        self.tracer.record(
+            "verify", v0, v_dur, kind="compute", step=self.step_idx,
+            active=len(active), tokens=emitted_total,
+            drafted=sum(len(d) for d in drafts.values()),
+        )
+        self.tracer.record(
+            "accept", t0, self._clock() - t0, kind="host",
+            step=self.step_idx, accepted=accepted_total, emitted=emitted_total,
+        )
+        return emitted_total
 
     def _emit(self, slot: int, tok: int, caps: Any, *, slot_axis: bool) -> None:
         rid = self.sched.slots[slot]
@@ -334,11 +542,20 @@ class MegaServe:
 
     # ------------------------------------------------------------ metrics
     def metrics(self) -> dict:
+        """Fleet metrics: tokens/s, TTFT/latency percentiles, preemptions,
+        engine steps, and (when speculation is on) draft acceptance."""
         reqs = list(self.sched.requests.values())
-        return {
+        out = {
             **aggregate_metrics(reqs, wall=self._clock()),
             "steps": self.step_idx,
         }
+        if self._spec_step is not None:
+            proposed = sum(r.spec_proposed for r in reqs)
+            accepted = sum(r.spec_accepted for r in reqs)
+            out["spec_proposed"] = proposed
+            out["spec_accepted"] = accepted
+            out["spec_accept_rate"] = accepted / proposed if proposed else 0.0
+        return out
 
     def trace_events(self):
         return self.tracer.events
@@ -480,7 +697,10 @@ def make_poisson_workload(
     specs, random token prompts, and a ``ServeConfig`` sized so the worst
     request fits one slot — ``num_blocks=0`` sizes the pool for zero
     preemption (every slot can hold its worst case simultaneously, plus the
-    reserved null block).  Returns (specs, prompts by rid, serve_cfg)."""
+    reserved null block).  The sizing also covers speculative decoding:
+    draft budgets are capped so every real verify write stays inside the
+    worst-case footprint (``_collect_drafts``).  Returns (specs, prompts by
+    rid, serve_cfg)."""
     from repro.core.simkit.workload import poisson_requests
 
     specs = poisson_requests(

@@ -1,0 +1,153 @@
+"""Sampler: seeded determinism, temperature/top-k/top-p support + distribution
+sanity, and speculative-decoding acceptance (greedy + rejection sampling)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.serve.sampler import greedy_verify, rejection_verify, sample
+
+# ---------------------------------------------------------------- sample ---
+
+
+def _logits(probs):
+    return jnp.log(jnp.asarray(probs, jnp.float32))[None, :]
+
+
+def test_greedy_is_argmax_and_needs_no_key():
+    logits = _logits([0.1, 0.2, 0.6, 0.1])
+    assert int(sample(logits)[0]) == 2
+    assert int(sample(logits, temperature=0.0)[0]) == 2
+    # a key without temperature still decodes greedily
+    assert int(sample(logits, jax.random.PRNGKey(0))[0]) == 2
+
+
+def test_seeded_determinism():
+    logits = jnp.asarray(
+        np.random.default_rng(0).standard_normal((4, 64)), jnp.float32
+    )
+    a = sample(logits, jax.random.PRNGKey(7), temperature=1.0)
+    b = sample(logits, jax.random.PRNGKey(7), temperature=1.0)
+    c = sample(logits, jax.random.PRNGKey(8), temperature=1.0)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_low_temperature_approaches_greedy():
+    logits = _logits([0.05, 0.9, 0.05])
+    toks = [
+        int(sample(logits, jax.random.PRNGKey(i), temperature=0.01)[0])
+        for i in range(16)
+    ]
+    assert set(toks) == {1}
+
+
+def test_top_k_restricts_support():
+    logits = _logits([0.4, 0.3, 0.2, 0.1])
+    seen = {
+        int(sample(logits, jax.random.PRNGKey(i), temperature=2.0, top_k=2)[0])
+        for i in range(64)
+    }
+    assert seen <= {0, 1} and len(seen) == 2
+
+
+def test_top_p_restricts_support_to_minimal_nucleus():
+    # cumulative mass before each sorted token: 0, .5, .8, .95 -> top_p=0.6
+    # keeps exactly {0, 1} (the smallest covering set includes token 1)
+    logits = _logits([0.5, 0.3, 0.15, 0.05])
+    seen = {
+        int(sample(logits, jax.random.PRNGKey(i), temperature=1.0, top_p=0.6)[0])
+        for i in range(128)
+    }
+    assert seen == {0, 1}
+    # a tiny top_p still keeps the argmax
+    seen = {
+        int(sample(logits, jax.random.PRNGKey(i), temperature=1.0, top_p=1e-6)[0])
+        for i in range(16)
+    }
+    assert seen == {0}
+
+
+def test_temperature_sampling_matches_softmax_distribution():
+    probs = np.asarray([0.45, 0.35, 0.15, 0.05])
+    logits = jnp.log(jnp.asarray(probs, jnp.float32))
+    n = 4000
+    toks = np.asarray(
+        jax.random.categorical(jax.random.PRNGKey(0), logits, shape=(n,))
+    )
+    # the sampler must agree with the same categorical draw
+    toks2 = np.asarray(
+        sample(jnp.tile(logits[None], (n, 1)), jax.random.PRNGKey(0),
+               temperature=1.0)
+    )
+    freq = np.bincount(toks2, minlength=4) / n
+    np.testing.assert_allclose(freq, probs, atol=0.03)
+    assert toks.shape == toks2.shape
+
+
+# --------------------------------------------------------- greedy_verify ---
+
+
+def test_greedy_verify_full_acceptance_emits_bonus():
+    n, emitted = greedy_verify(np.asarray([5, 6, 7, 9]), [5, 6, 7])
+    assert n == 3 and emitted == [5, 6, 7, 9]
+
+
+def test_greedy_verify_first_mismatch_corrects():
+    n, emitted = greedy_verify(np.asarray([5, 8, 7, 9]), [5, 6, 7])
+    assert n == 1 and emitted == [5, 8]
+    n, emitted = greedy_verify(np.asarray([4, 8, 7, 9]), [5, 6, 7])
+    assert n == 0 and emitted == [4]
+
+
+def test_greedy_verify_empty_draft_is_plain_decode():
+    n, emitted = greedy_verify(np.asarray([3, 0, 0]), [])
+    assert n == 0 and emitted == [3]
+
+
+# ------------------------------------------------------ rejection_verify ---
+
+
+def test_rejection_verify_deterministic_extremes():
+    V = 4
+    # target puts all mass on the drafts -> always accepted + bonus from row k
+    p = np.zeros((3, V))
+    p[0, 1] = p[1, 2] = 1.0
+    p[2, 3] = 1.0
+    n, emitted = rejection_verify(p, [1, 2], np.random.default_rng(0))
+    assert n == 2 and emitted == [1, 2, 3]
+    # target puts zero mass on the draft -> rejected at row 0, correction
+    # drawn from the residual (= target with the draft token zeroed)
+    p = np.zeros((2, V))
+    p[0, 2] = 1.0
+    for seed in range(8):
+        n, emitted = rejection_verify(p, [1], np.random.default_rng(seed))
+        assert n == 0 and emitted == [2]
+
+
+def test_rejection_verify_preserves_target_marginal():
+    """The emitted first token must be distributed exactly like the target
+    distribution, whatever (deterministic) token the drafter proposed."""
+    V = 4
+    target = np.asarray([0.5, 0.25, 0.15, 0.1])
+    p = np.zeros((2, V))
+    p[0] = target
+    p[1] = 1.0 / V
+    rng = np.random.default_rng(42)
+    n_trials = 6000
+    for draft_tok in (0, 2):
+        counts = np.zeros(V)
+        for _ in range(n_trials):
+            _, emitted = rejection_verify(p, [draft_tok], rng)
+            counts[emitted[0]] += 1
+        np.testing.assert_allclose(counts / n_trials, target, atol=0.03)
+
+
+def test_rejection_verify_emits_between_1_and_k_plus_1():
+    rng = np.random.default_rng(3)
+    p = np.full((4, 8), 1.0 / 8)
+    for _ in range(32):
+        n, emitted = rejection_verify(p, [1, 2, 3], rng)
+        assert 0 <= n <= 3 and len(emitted) == n + 1

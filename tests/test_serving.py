@@ -535,6 +535,223 @@ def test_trace_events_and_scope_captures(qwen_serve):
         assert any("final_hidden" in k for k in caps), caps
 
 
+# -------------------------------------------- speculative decoding ---
+
+
+@pytest.mark.parametrize("window", [None, 7])
+def test_paged_ref_multi_query_matches_per_row(window):
+    """q_len > 1 (the spec-decode verify layout) must equal scoring each
+    query row separately at its own causal kv_len — causal masking inside
+    the query block, window shifted per query."""
+    from repro.kernels.paged_attention import paged_attention_ref
+
+    Q = 4
+    rng = np.random.default_rng(9)
+    q, kp, vp, tables, kv_len = _rand_paged(
+        seed=9, S=3, bs=8, K=2, G=2, dh=16, kv_lens=[6, 17, 24]
+    )
+    q4 = jnp.asarray(rng.standard_normal((3, Q, q.shape[1], 16)), jnp.float32)
+    out = paged_attention_ref(q4, kp, vp, tables, kv_len, scale=0.3,
+                              window=window)
+    assert out.shape == (3, Q, q.shape[1], 16)
+    for qi in range(Q):
+        row = paged_attention_ref(
+            q4[:, qi], kp, vp, tables, kv_len - (Q - 1 - qi), scale=0.3,
+            window=window,
+        )
+        np.testing.assert_allclose(
+            np.asarray(out[:, qi]), np.asarray(row), atol=1e-6
+        )
+
+
+@pytest.mark.parametrize("window", [None, 7])
+def test_paged_kernel_interpret_multi_query(window):
+    from repro.kernels.paged_attention import (
+        paged_attention_pallas,
+        paged_attention_ref,
+    )
+
+    rng = np.random.default_rng(13)
+    q, kp, vp, tables, kv_len = _rand_paged(
+        seed=13, S=4, bs=8, K=2, G=2, dh=16, kv_lens=[5, 8, 19, 23]
+    )
+    q4 = jnp.asarray(rng.standard_normal((4, 3, q.shape[1], 16)), jnp.float32)
+    ref = paged_attention_ref(q4, kp, vp, tables, kv_len, scale=0.25,
+                              window=window)
+    ker = paged_attention_pallas(q4, kp, vp, tables, kv_len, scale=0.25,
+                                 window=window, interpret=True)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref), atol=2e-6)
+
+
+def test_ngram_drafter_prompt_lookup():
+    from repro.serve import NGramDrafter
+
+    d = NGramDrafter(max_ngram=3, min_ngram=1)
+    # suffix [7, 8] occurred earlier -> propose what followed it
+    assert d.propose([7, 8, 9, 1, 7, 8], 2) == [9, 1]
+    assert d.propose([7, 8, 9, 1, 7, 8], 4) == [9, 1, 7, 8]
+    # no earlier occurrence of any suffix n-gram -> no proposal
+    assert d.propose([1, 2, 3, 4, 5], 3) == []
+    assert d.propose([5], 3) == []
+    assert d.propose([7, 8, 9], 0) == []
+    # the most recent match wins over an older one
+    assert d.propose([2, 5, 1, 2, 6, 1, 2], 1) == [6]
+
+
+def test_scheduler_spec_capacity_and_trim():
+    cfg = ServeConfig(num_slots=1, block_size=4, num_blocks=8,
+                      max_blocks_per_slot=6, max_prefills_per_step=1)
+    s = Scheduler(cfg)
+    s.submit(_mk(0, plen=4, max_new=12))
+    s.admit(now=0.0)
+    assert len(s.blocks[0]) == 1 and s.pos[0] == 4
+    # a 4-draft verify writes positions 4..8 -> needs 3 blocks total
+    assert s.ensure_capacity({0: 5}) == []
+    assert len(s.blocks[0]) == 3
+    # only 1 draft accepted (pos -> 6): trim rewinds the high-water mark
+    s.advance(0, 2)
+    s.trim_blocks()
+    assert len(s.blocks[0]) == 2
+    assert s.allocator.num_held == 2
+    assert list(s.tables[0, 2:]) == [0] * 4
+
+
+def test_spec_greedy_matches_nonspec_paged(qwen_serve):
+    """Speculative greedy streams must be token-identical to plain paged
+    decode, while emitting more than one token per accepted verify step."""
+    cfg, params = qwen_serve
+    rng = np.random.default_rng(21)
+    prompts = [rng.integers(2, cfg.vocab_size, size=n).tolist()
+               for n in (16, 16, 32, 16)]
+    max_new = [12, 6, 10, 8]
+    base = dict(num_slots=2, block_size=8, num_blocks=33, max_blocks_per_slot=8)
+
+    srv = MegaServe(cfg, params, ServeConfig(**base))
+    for p, m in zip(prompts, max_new):
+        srv.submit(p, m, arrival=0.0)
+    ref = srv.drain()
+
+    spec = MegaServe(cfg, params, ServeConfig(
+        **base, spec_decode=True, spec_k=4))
+    assert spec.decode_path == "paged"
+    for p, m in zip(prompts, max_new):
+        spec.submit(p, m, arrival=0.0)
+    outs = spec.drain()
+    assert outs == ref
+    met = spec.metrics()
+    assert met["spec_proposed"] > 0 and met["spec_accepted"] > 0
+    # accepted drafts compress engine steps below one-token-per-step
+    assert met["steps"] < srv.metrics()["steps"]
+    names = {e.name for e in spec.trace_events()}
+    assert {"draft", "verify", "accept"} <= names
+
+
+def test_spec_preemption_roundtrip_preserves_outputs(qwen_serve):
+    """Preemption-by-recompute under speculation: the drafter is stateless
+    given history, so the recompute path must land on identical streams."""
+    cfg, params = qwen_serve
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(2, cfg.vocab_size, size=16).tolist()
+               for _ in range(3)]
+    ref, _ = StaticRunner(cfg, params).run(
+        [(p, 12, 0.0) for p in prompts], batch_size=3)
+    srv = MegaServe(cfg, params, ServeConfig(
+        num_slots=3, block_size=8, num_blocks=9, max_blocks_per_slot=4,
+        spec_decode=True, spec_k=3))
+    for p in prompts:
+        srv.submit(p, 12, arrival=0.0)
+    outs = srv.drain()
+    assert srv.metrics()["preemptions"] > 0
+    assert outs == ref
+
+
+def test_spec_griffin_window_family():
+    """Windowed-attention griffin (pattern reduced to attn-only: every cache
+    leaf is paged) must speculate through the window-masked multi-query
+    kernel path with token-identical greedy streams."""
+    from dataclasses import replace as dc_replace
+
+    cfg = get_config("recurrentgemma-9b", smoke=True).replace(
+        compute_dtype="float32")
+    cfg = cfg.replace(griffin=dc_replace(cfg.griffin, pattern=("attn",)))
+    params = get_model(cfg).init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(2, cfg.vocab_size, size=n).tolist()
+               for n in (8, 16)]
+    base = dict(num_slots=2, block_size=8, num_blocks=17,
+                max_blocks_per_slot=4)
+    srv = MegaServe(cfg, params, ServeConfig(**base))
+    assert all(jax.tree.leaves(srv.kv.paged))
+    for p in prompts:
+        srv.submit(p, 8, arrival=0.0)
+    ref = srv.drain()
+    spec = MegaServe(cfg, params, ServeConfig(
+        **base, spec_decode=True, spec_k=3))
+    for p in prompts:
+        spec.submit(p, 8, arrival=0.0)
+    assert spec.drain() == ref
+
+
+def test_spec_rejects_state_family_and_gathered(qwen_serve):
+    cfg, params = qwen_serve
+    rcfg = get_config("rwkv6-3b", smoke=True).replace(compute_dtype="float32")
+    rparams = get_model(rcfg).init(rcfg, jax.random.PRNGKey(0))
+    scfg = dict(num_slots=2, block_size=8, num_blocks=17,
+                max_blocks_per_slot=4, spec_decode=True)
+    with pytest.raises(ValueError, match="attention-only"):
+        MegaServe(rcfg, rparams, ServeConfig(**scfg))
+    with pytest.raises(ValueError, match="paged"):
+        MegaServe(cfg, params, ServeConfig(**scfg, decode_path="gathered"))
+
+
+def test_spec_adversarial_drafter_adapts_off(qwen_serve):
+    """A drafter that is always wrong must not change outputs, and the
+    per-request draft-length adaptation must shut speculation off (plain
+    decode steps resume) instead of burning a verify every tick."""
+    from repro.serve import RandomDrafter
+
+    cfg, params = qwen_serve
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(2, cfg.vocab_size, size=16).tolist()
+    base = dict(num_slots=2, block_size=8, num_blocks=33, max_blocks_per_slot=8)
+    srv = MegaServe(cfg, params, ServeConfig(**base))
+    srv.submit(prompt, 24, arrival=0.0)
+    ref = srv.drain()
+
+    spec = MegaServe(cfg, params, ServeConfig(
+        **base, spec_decode=True, spec_k=4, spec_retry=64),
+        drafter=RandomDrafter(cfg.vocab_size, seed=0))
+    rid = spec.submit(prompt, 24, arrival=0.0)
+    outs = spec.drain()
+    assert outs == {rid: ref[0]}
+    req = spec.sched.requests[rid]
+    assert req.draft_len == 0                   # adapted off
+    met = spec.metrics()
+    assert met["spec_accept_rate"] < 0.2
+    # after adaptation the engine falls back to plain decode ticks
+    assert any(e.name == "decode" for e in spec.trace_events())
+
+
+def test_spec_eos_mid_acceptance_stops_stream(qwen_serve):
+    """An eos inside an accepted draft run must cut the stream exactly at
+    the eos, matching the non-speculative path."""
+    cfg, params = qwen_serve
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(2, cfg.vocab_size, size=16).tolist()
+    base = dict(num_slots=2, block_size=8, num_blocks=33, max_blocks_per_slot=8)
+    srv = MegaServe(cfg, params, ServeConfig(**base))
+    rid = srv.submit(prompt, 16, arrival=0.0)
+    ref = srv.drain()[rid]
+    eos = ref[7]
+    want = ref[: ref.index(eos) + 1]
+
+    for spec_on in (False, True):
+        s = MegaServe(cfg, params, ServeConfig(
+            **base, spec_decode=spec_on, spec_k=4))
+        r = s.submit(prompt, 16, arrival=0.0, eos_id=eos)
+        assert s.drain()[r] == want, f"spec_decode={spec_on}"
+
+
 def test_poisson_requests_inclusive_budget_range():
     reqs = poisson_requests(64, rate=100.0, max_new_range=(1, 1), seed=0)
     assert {r.max_new for r in reqs} == {1}
