@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test ci bench-serve docs-check deps deps-dev
+.PHONY: test ci cli-smoke bench-serve docs-check deps deps-dev
 
 # tier-1 verification
 test:
@@ -11,7 +11,14 @@ test:
 docs-check:
 	python tools/docs_check.py
 
-ci: test docs-check
+# end-to-end CPU smoke of the unified CLI (train + serve workloads)
+cli-smoke:
+	python -m repro train --arch qwen2-0.5b --smoke --steps 8 \
+		--set train.seq_len=64 --set train.log_every=4
+	python -m repro serve --arch qwen2-0.5b --smoke --continuous \
+		--requests 8 --max-new 8 --rate 500
+
+ci: test docs-check cli-smoke
 
 # decode-latency-vs-max_len sweep (paged vs gathered) + continuous-vs-static;
 # persists the perf trajectory to BENCH_serve.json

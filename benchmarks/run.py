@@ -49,7 +49,7 @@ def bench_megascan_tracer_overhead() -> None:
     f = jax.jit(lambda x: jnp.tanh(x @ x))
     f(x).block_until_ready()
     base = _timeit(lambda: f(x).block_until_ready(), n=20)
-    tr = Tracer(0)
+    tr = Tracer(rank=0)
 
     def traced():
         with tr.scope("op", op="matmul"):

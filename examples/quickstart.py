@@ -1,59 +1,60 @@
-"""Quickstart: train a tiny LM for 30 steps with all four MegatronApp modules
-active — MegaScan tracing, a MegaDPP plan, MegaScope probes, and a MegaFBD
-placement check.
+"""Quickstart: one Session, all four MegatronApp modules as plugins.
+
+Trains a tiny LM for 30 steps with MegaScan tracing, MegaScope probes,
+MegaDPP pipeline planning, and MegaFBD placement/coordination attached —
+each through the same ``ModulePlugin`` interface, toggled by name exactly
+like ``python -m repro train --modules scan,scope,dpp,fbd``.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
-import jax
-
-from repro.configs import get_config
-from repro.core.dpp.planner import Planner
-from repro.core.fbd.ranks import colocated_placement, evaluate_placement, plan_placement
-from repro.core.scope import ProbeSpec, ScopeCollector
-from repro.core.simkit.workload import ModelProfile, Topology
-from repro.core.tracing import Tracer, detect, to_chrome
-from repro.data.pipeline import DataConfig
-from repro.train.loop import LoopConfig, train
-from repro.train.optim import OptimizerConfig
+from repro.app import RunConfig, Session
+from repro.core.tracing import to_chrome
 
 
 def main() -> None:
-    cfg = get_config("qwen2-0.5b", smoke=True).replace(name="quickstart-lm")
-    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8)
-    scope = ScopeCollector(probes=[ProbeSpec("mlp_hidden", "stats")])
-    tracer = Tracer(rank=0, enabled=True)
-
-    print("== training (MegaScope probes + MegaScan tracing on) ==")
-    state, history = train(
-        cfg, OptimizerConfig(lr=3e-3, warmup_steps=10, total_steps=30),
-        data, LoopConfig(n_steps=30, log_every=10),
-        collector=scope, tracer=tracer,
+    cfg = RunConfig.for_workload(
+        "train",
+        arch="qwen2-0.5b",
+        smoke=True,
+        modules=("scan", "scope", "dpp", "fbd"),
     )
+    cfg.train.steps = 30
+    cfg.train.lr = 3e-3
+    cfg.train.seq_len = 64
+    cfg.train.log_every = 10
+    cfg.dpp.memory_cap_gib = 8.0
+
+    print("== training (all four modules attached as plugins) ==")
+    session = Session(cfg)
+    state, history = session.run()
     first, last = history[0]["loss"], history[-1]["loss"]
-    print(f"loss: {first:.3f} -> {last:.3f} ({len(tracer.events)} trace events)")
+    print(f"loss: {first:.3f} -> {last:.3f} "
+          f"({session.results['scan']['events']} trace events)")
     assert last < first, "training should reduce loss"
 
     print("\n== MegaScan: export chrome trace ==")
-    doc = to_chrome(tracer.events)
+    doc = to_chrome(session.tracer.events)
     print(f"chrome trace with {len(doc['traceEvents'])} entries "
           "(load in chrome://tracing or Perfetto)")
 
-    print("\n== MegaDPP: plan a pipeline schedule ==")
-    plan = Planner(
-        Topology(dp=1, pp=4, tp=1), ModelProfile(n_chunks=2),
-        n_micro=8, memory_cap=8 << 30,
-    ).plan()
-    print(f"chosen schedule: {plan.schedule_name} (wave={plan.wave}), "
-          f"makespan={plan.makespan*1e3:.2f} ms, "
-          f"peak act mem={plan.peak_memory >> 20} MiB")
+    print("\n== MegaScope: probe captures ==")
+    for key, hits in session.results["scope"]["captured"].items():
+        print(f"  {key}: {hits} steps")
+
+    print("\n== MegaDPP: planned pipeline schedule ==")
+    dpp = session.results["dpp"]
+    print(f"chosen schedule: {dpp['schedule']} (wave={dpp['wave']}), "
+          f"makespan={dpp['makespan_ms']:.2f} ms, "
+          f"peak act mem={dpp['peak_memory_mib']} MiB, "
+          f"measured step p50={dpp['step_ms_p50']:.1f} ms")
 
     print("\n== MegaFBD: placement on a heterogeneous cluster ==")
-    speed = {d: 1.0 for d in range(4)} | {d: 0.4 for d in range(4, 8)}
-    dec = evaluate_placement(plan_placement(8, speed))
-    col = evaluate_placement(colocated_placement(8, speed))
-    print(f"co-located: {col*1e3:.2f} ms | decoupled F/B: {dec*1e3:.2f} ms "
-          f"({col/dec:.2f}x)")
+    fbd = session.results["fbd"]
+    print(f"co-located: {fbd['colocated_ms']:.2f} ms | "
+          f"decoupled F/B: {fbd['decoupled_ms']:.2f} ms "
+          f"({fbd['speedup']:.2f}x, "
+          f"{fbd['coordinated_groups']} collectives coordinated)")
 
 
 if __name__ == "__main__":

@@ -1,4 +1,4 @@
-"""End-to-end LM training driver with checkpoint/restart.
+"""End-to-end LM training driver with checkpoint/restart, on the Session API.
 
 Presets scale from CPU-runnable to the deliverable-scale run:
 
@@ -8,16 +8,16 @@ Presets scale from CPU-runnable to the deliverable-scale run:
 
 The 100m preset is the "~100M parameters for a few hundred steps" end-to-end
 configuration; on the CPU container use the default tiny preset to see the
-same loop (data pipeline -> jit step -> async ckpt -> resume) behave.
+same loop (data pipeline -> jit step -> async ckpt -> resume) behave.  The
+presets are unregistered ``ModelConfig``s, so this also demonstrates driving
+a Session with an explicit model config instead of an ``--arch`` lookup.
 """
 
 import argparse
 import logging
 
+from repro.app import RunConfig, Session
 from repro.configs.base import ModelConfig
-from repro.data.pipeline import DataConfig
-from repro.train.loop import LoopConfig, train
-from repro.train.optim import OptimizerConfig
 
 PRESETS = {
     "tiny": dict(
@@ -50,25 +50,25 @@ def main() -> None:
     args = ap.parse_args()
 
     p = PRESETS[args.preset]
-    cfg = p["model"]
-    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=p["seq"],
-                      global_batch=p["batch"])
-    ocfg = OptimizerConfig(
-        lr=p["lr"], warmup_steps=max(args.steps // 10, 5),
-        total_steps=args.steps, schedule="cosine",
-    )
-    loop = LoopConfig(
-        n_steps=args.steps, log_every=max(args.steps // 12, 1),
-        ckpt_dir=args.ckpt_dir, ckpt_every=max(args.steps // 4, 10),
-        grad_accum=args.grad_accum,
-    )
-    state, history = train(cfg, ocfg, data, loop)
+    cfg = RunConfig.for_workload("train", modules=("scan",))
+    cfg.train.steps = args.steps
+    cfg.train.seq_len = p["seq"]
+    cfg.train.global_batch = p["batch"]
+    cfg.train.lr = p["lr"]
+    cfg.train.log_every = max(args.steps // 12, 1)
+    cfg.train.ckpt_dir = args.ckpt_dir or ""
+    cfg.train.ckpt_every = max(args.steps // 4, 10)
+    cfg.train.grad_accum = args.grad_accum
+
+    session = Session(cfg, model_cfg=p["model"])
+    state, history = session.run()
     print("\nstep  loss     ce       lr        wall_s")
     for h in history:
         print(f"{h['step']:>4}  {h['loss']:.4f}  {h.get('ce', 0):.4f}  "
               f"{h.get('lr', 0):.2e}  {h['wall_s']:>6}")
     assert history[-1]["loss"] < history[0]["loss"]
-    print("\nloss decreased — end-to-end pipeline OK")
+    print(f"\nloss decreased over {session.results['scan']['events']} traced "
+          "steps — end-to-end pipeline OK")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,6 @@
+"""``python -m repro`` — see :mod:`repro.app.cli`."""
+
+from repro.app.cli import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""`repro.app` — one Session API + one CLI for every workload and module.
+
+Public surface:
+
+* :class:`~repro.app.config.RunConfig` — typed, layered run configuration
+  (arch config -> workload defaults -> JSON -> dotted ``--set`` overrides);
+* :class:`~repro.app.session.Session` — the runtime object that owns mesh
+  selection, sharding-rule installation, the module plugins, and the shared
+  chrome-trace export;
+* :class:`~repro.app.plugins.ModulePlugin` + ``register_plugin`` — the
+  uniform plugin protocol under which MegaScan / MegaScope / MegaFBD /
+  MegaDPP attach to any workload;
+* ``python -m repro {train,serve,trace,dryrun}``
+  (:mod:`repro.app.cli`) — the single CLI replacing the per-workload
+  launchers (``repro.launch.train`` / ``repro.launch.serve`` remain as
+  deprecation shims).
+"""
+
+from repro.app.config import (
+    RunConfig,
+    WORKLOADS,
+    apply_dict,
+    apply_sets,
+    build_run_config,
+    parse_modules,
+    set_by_path,
+)
+from repro.app.plugins import (
+    PLUGIN_REGISTRY,
+    DppPlugin,
+    FbdPlugin,
+    ModulePlugin,
+    ScanPlugin,
+    ScopePlugin,
+    build_plugins,
+    register_plugin,
+)
+from repro.app.session import Session, pick_mesh
+
+__all__ = [
+    "PLUGIN_REGISTRY",
+    "RunConfig",
+    "Session",
+    "WORKLOADS",
+    "ModulePlugin",
+    "ScanPlugin",
+    "ScopePlugin",
+    "FbdPlugin",
+    "DppPlugin",
+    "apply_dict",
+    "apply_sets",
+    "build_plugins",
+    "build_run_config",
+    "parse_modules",
+    "pick_mesh",
+    "register_plugin",
+    "set_by_path",
+]

@@ -1,0 +1,299 @@
+"""Typed run configuration with uniform layering (the `repro.app` spine).
+
+A :class:`RunConfig` describes one run of one workload (``train`` / ``serve``
+/ ``trace`` / ``dryrun``) plus which of the four MegatronApp modules attach
+to it.  Values layer, most specific last:
+
+1. dataclass defaults (this file),
+2. workload defaults (:data:`WORKLOAD_DEFAULTS`),
+3. a JSON config file (``--config run.json`` — nested dicts mirror the
+   section structure),
+4. dotted overrides (``--set serve.spec_k=6 --set modules=scan,scope``),
+   values coerced to the target field's annotated type.
+
+This module is deliberately jax-free: the CLI builds a RunConfig before any
+backend initialisation (the dryrun workload must set ``XLA_FLAGS`` first).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import typing
+from dataclasses import dataclass, field
+from pathlib import Path
+
+WORKLOADS = ("train", "serve", "trace", "dryrun")
+
+
+@dataclass
+class TrainSection:
+    """Training-workload knobs (0 = derive from smoke/full at run time)."""
+
+    steps: int = 100
+    seq_len: int = 0               # 0 -> 128 smoke / 4096 full
+    global_batch: int = 0          # 0 -> 8 smoke / 256 full
+    lr: float = 3e-4
+    schedule: str = "cosine"       # cosine | wsd | constant
+    warmup_steps: int = 0          # 0 -> max(steps // 10, 5)
+    grad_accum: int = 1
+    ckpt_dir: str = ""             # "" = no checkpointing
+    ckpt_every: int = 50
+    log_every: int = 0             # 0 -> max(steps // 10, 1)
+
+
+@dataclass
+class ServeSection:
+    """Serving-workload knobs (mirrors the legacy launcher flag set)."""
+
+    continuous: bool = False       # MegaServe continuous batching vs lockstep
+    batch: int = 4                 # static path: lockstep batch size
+    prompt_len: int = 32           # static path: shared prompt length
+    max_new: int = 16
+    temperature: float = 0.0
+    requests: int = 16             # continuous path: workload size
+    rate: float = 100.0            # Poisson arrival rate, requests/s
+    slots: int = 4
+    block_size: int = 16
+    num_blocks: int = 0            # 0 = size pool for zero preemption
+    prompt_lens: tuple[int, ...] = (16, 32, 64, 128, 256)
+    decode_path: str = "auto"      # auto | paged | gathered
+    spec_decode: bool = False
+    spec_k: int = 4
+    drafter: str = "ngram"         # ngram | random
+
+
+@dataclass
+class ScanSection:
+    """MegaScan plugin: always-on tracing of every workload step."""
+
+    rank: int = 0
+    # sync=True wraps the step with block_until_ready so scope durations are
+    # faithful (the CPU analogue of the paper's CUDA-event bracketing) at
+    # the cost of serializing async dispatch; off by default so the default
+    # CLI path keeps the launcher's original pipelined throughput
+    sync: bool = False
+
+
+@dataclass
+class ScopeSection:
+    """MegaScope plugin: probe / perturbation specs as compact strings.
+
+    ``probes``: ``"pattern[:compressor]"`` (default compressor ``stats``).
+    ``perturbs``: ``"pattern:kind:amount[:layer]"``.
+    """
+
+    probes: tuple[str, ...] = ("mlp_hidden:stats",)
+    perturbs: tuple[str, ...] = ()
+
+
+@dataclass
+class FbdSection:
+    """MegaFBD plugin: heterogeneous-cluster placement model."""
+
+    n_virtual: int = 8             # virtual ranks to place
+    n_devices: int = 8             # physical devices in the speed model
+    slow_frac: float = 0.5         # fraction of devices that are slow
+    slow_speed: float = 0.4        # their relative speed
+
+
+@dataclass
+class DppSection:
+    """MegaDPP plugin: pipeline-planning topology + budget."""
+
+    dp: int = 1
+    pp: int = 4
+    tp: int = 1
+    n_micro: int = 8
+    n_chunks: int = 2
+    memory_cap_gib: float = 8.0
+
+
+@dataclass
+class TraceSection:
+    """Offline MegaScan workload: simulate (or load) -> align -> detect."""
+
+    load: str = ""                 # JSONL trace to analyse ("" = simulate)
+    dp: int = 2
+    pp: int = 2
+    tp: int = 2
+    n_micro: int = 8
+    n_iters: int = 3
+    slow_rank: int = 5             # simulated ground truth
+    slow_factor: float = 0.5
+    out: str = ""                  # directory for trace.json + diagnosis.json
+
+
+@dataclass
+class DryrunSection:
+    """Compile-analysis workload (lower/compile cells on production meshes)."""
+
+    shape: str = ""
+    all: bool = False
+    multi_pod: str = "off"         # off | on | both
+    profile: str = ""
+    grad_accum: int = 1
+    out: str = "artifacts/dryrun"
+    save_hlo: bool = False
+    host_mesh: bool = False        # small host mesh instead of 16x16 (smoke)
+
+
+@dataclass
+class RunConfig:
+    """One workload run: arch + mesh + module toggles + per-section knobs."""
+
+    workload: str = "train"
+    arch: str = ""
+    smoke: bool = False
+    seed: int = 0
+    modules: tuple[str, ...] = ("scan",)
+    mesh: str = "auto"             # auto | auto-mp | host | pod1 | pod2
+    trace_out: str = ""            # chrome-trace export path (any workload)
+    train: TrainSection = field(default_factory=TrainSection)
+    serve: ServeSection = field(default_factory=ServeSection)
+    scan: ScanSection = field(default_factory=ScanSection)
+    scope: ScopeSection = field(default_factory=ScopeSection)
+    fbd: FbdSection = field(default_factory=FbdSection)
+    dpp: DppSection = field(default_factory=DppSection)
+    trace: TraceSection = field(default_factory=TraceSection)
+    dryrun: DryrunSection = field(default_factory=DryrunSection)
+
+    @classmethod
+    def for_workload(cls, workload: str, **top) -> "RunConfig":
+        """Defaults + workload defaults + keyword top-level fields."""
+        if workload not in WORKLOADS:
+            raise ValueError(f"unknown workload {workload!r}; one of {WORKLOADS}")
+        cfg = cls(workload=workload)
+        for path, value in WORKLOAD_DEFAULTS.get(workload, {}).items():
+            set_by_path(cfg, path, value)
+        for k, v in top.items():
+            set_by_path(cfg, k, v)
+        return cfg
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+#: Layer 2: per-workload defaults applied over the dataclass defaults.
+#: Tracing is *on by default for every workload* — the repo's documented
+#: unification of the old split (train silently off, serve on).
+WORKLOAD_DEFAULTS: dict[str, dict[str, object]] = {
+    "train": {"modules": ("scan",)},
+    "serve": {"modules": ("scan",)},
+    "trace": {"modules": ()},      # the workload *is* MegaScan, offline
+    "dryrun": {"modules": ()},     # compile analysis: nothing to attach to
+}
+
+
+# ---------------------------------------------------------------------------
+# layering machinery
+# ---------------------------------------------------------------------------
+
+
+def _resolve_types(obj) -> dict[str, type]:
+    # annotations are strings under `from __future__ import annotations`
+    return typing.get_type_hints(type(obj))
+
+
+def coerce(value, target: type):
+    """Coerce a string (or JSON scalar/list) to an annotated field type."""
+    origin = typing.get_origin(target)
+    if origin is tuple:
+        items = value.split(",") if isinstance(value, str) else list(value)
+        items = [x for x in items if x != ""] if isinstance(value, str) else items
+        elem = (typing.get_args(target) or (str,))[0]
+        return tuple(coerce(x, elem) for x in items)
+    if target is bool:
+        if isinstance(value, bool):
+            return value
+        s = str(value).strip().lower()
+        if s in ("1", "true", "yes", "on"):
+            return True
+        if s in ("0", "false", "no", "off"):
+            return False
+        raise ValueError(f"cannot parse {value!r} as bool")
+    if target in (int, float, str):
+        return target(value)
+    return value
+
+
+def set_by_path(cfg: RunConfig, path: str, value) -> None:
+    """Set ``a.b`` on a RunConfig, coercing ``value`` to the field's type.
+
+    Unknown sections/fields raise ``KeyError`` — a typo in ``--set`` fails
+    loudly instead of silently configuring nothing.
+    """
+    obj = cfg
+    parts = path.split(".")
+    for p in parts[:-1]:
+        types = _resolve_types(obj)
+        if p not in types or not dataclasses.is_dataclass(types[p]):
+            raise KeyError(f"unknown config section {p!r} in {path!r}")
+        obj = getattr(obj, p)
+    leaf = parts[-1]
+    types = _resolve_types(obj)
+    if leaf not in types:
+        raise KeyError(
+            f"unknown config field {path!r}; "
+            f"{type(obj).__name__} has {sorted(types)}"
+        )
+    if dataclasses.is_dataclass(types[leaf]):
+        raise KeyError(f"{path!r} is a section, not a field")
+    setattr(obj, leaf, coerce(value, types[leaf]))
+
+
+def apply_dict(cfg: RunConfig, data: dict, prefix: str = "") -> None:
+    """Apply a nested dict (e.g. a parsed JSON config file) as overrides."""
+    for k, v in data.items():
+        path = f"{prefix}{k}"
+        if isinstance(v, dict):
+            apply_dict(cfg, v, prefix=f"{path}.")
+        else:
+            set_by_path(cfg, path, v)
+
+
+def apply_sets(cfg: RunConfig, sets: list[str] | tuple[str, ...]) -> None:
+    """Apply ``key=value`` dotted overrides (the ``--set`` flag)."""
+    for s in sets:
+        if "=" not in s:
+            raise ValueError(f"--set expects key=value, got {s!r}")
+        key, _, val = s.partition("=")
+        set_by_path(cfg, key.strip(), val.strip())
+
+
+def parse_modules(spec: str | tuple[str, ...]) -> tuple[str, ...]:
+    """Parse a ``--modules`` list; ``none``/empty disables everything."""
+    if isinstance(spec, str):
+        spec = tuple(x.strip() for x in spec.split(",") if x.strip())
+    mods = tuple(spec)
+    if mods in (("none",), ("off",)):
+        return ()
+    from repro.app.plugins import PLUGIN_REGISTRY  # local: keeps config jax-free
+
+    for m in mods:
+        if m not in PLUGIN_REGISTRY:
+            raise ValueError(
+                f"unknown module {m!r}; registered: {sorted(PLUGIN_REGISTRY)}"
+            )
+    return mods
+
+
+def build_run_config(
+    workload: str,
+    *,
+    config_json: str | None = None,
+    sets: list[str] | tuple[str, ...] = (),
+    **top,
+) -> RunConfig:
+    """Full layering pipeline: defaults -> workload -> JSON -> ``--set`` ->
+    explicit keyword (CLI flag) overrides."""
+    cfg = RunConfig.for_workload(workload)
+    if config_json:
+        apply_dict(cfg, json.loads(Path(config_json).read_text()))
+    apply_sets(cfg, sets)
+    for k, v in top.items():
+        if k == "modules":
+            v = parse_modules(v)
+        set_by_path(cfg, k.replace("__", "."), v)
+    cfg.modules = parse_modules(cfg.modules)
+    return cfg

@@ -1,0 +1,285 @@
+"""ModulePlugin protocol: the four MegatronApp modules as uniform plugins.
+
+Every module attaches to a :class:`repro.app.session.Session` through the
+same four-hook surface:
+
+* ``setup(session)``    — claim resources on the session (tracer, collector,
+  planner state) before the workload builds anything;
+* ``wrap_step(fn)``     — decorate the workload's jitted step callable;
+* ``on_step(session, events, metrics)`` — observe one workload step: the
+  MegaScan ``TraceEvent``s it emitted and its metrics dict;
+* ``finalize(session)`` — return a JSON-able report (merged into
+  ``session.results``) and release anything held.
+
+Adding a module to every workload is a registration (``@register_plugin``)
+instead of another hand-wired driver — the redesign's whole point.
+
+Plugins are constructed from their ``RunConfig`` section only; heavyweight
+imports (jax-backed collectors) happen inside ``setup`` so the CLI can parse
+and validate configs before any backend initialisation.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+PLUGIN_REGISTRY: dict[str, type["ModulePlugin"]] = {}
+
+
+def register_plugin(cls: type["ModulePlugin"]) -> type["ModulePlugin"]:
+    """Class decorator: make a plugin selectable via ``--modules <name>``."""
+    if not getattr(cls, "name", ""):
+        raise ValueError(f"{cls.__name__} needs a non-empty `name`")
+    PLUGIN_REGISTRY[cls.name] = cls
+    return cls
+
+
+class ModulePlugin:
+    """Base plugin: every hook is a no-op, subclass what you need."""
+
+    name = ""
+
+    def __init__(self, run_cfg):
+        self.run_cfg = run_cfg
+
+    def setup(self, session) -> None:  # noqa: ARG002 - uniform signature
+        return None
+
+    def wrap_step(self, step_fn):
+        return step_fn
+
+    def on_step(self, session, events, metrics) -> None:
+        return None
+
+    def finalize(self, session) -> dict:
+        return {}
+
+
+def build_plugins(names, run_cfg) -> list[ModulePlugin]:
+    out = []
+    for n in names:
+        cls = PLUGIN_REGISTRY.get(n)
+        if cls is None:
+            raise ValueError(f"unknown module {n!r}; registered: {sorted(PLUGIN_REGISTRY)}")
+        out.append(cls(run_cfg))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MegaScan — always-on workload tracing
+# ---------------------------------------------------------------------------
+
+
+@register_plugin
+class ScanPlugin(ModulePlugin):
+    """Owns the session Tracer; optionally synchronises inside step scopes.
+
+    The tracer the session hands to the train loop / MegaServe brackets
+    *dispatch* of jitted blocks; with ``--set scan.sync=true`` the step
+    callable is wrapped with ``jax.block_until_ready`` so scope durations
+    are faithful — the CPU analogue of the paper's CUDA-event bracketing —
+    at the cost of serializing async dispatch (off by default).
+    """
+
+    name = "scan"
+
+    def setup(self, session) -> None:
+        from repro.core.tracing.tracer import Tracer
+
+        self._scan_cfg = self.run_cfg.scan
+        session.tracer = Tracer(rank=self._scan_cfg.rank, enabled=True)
+
+    def wrap_step(self, step_fn):
+        if not self._scan_cfg.sync:
+            return step_fn
+        import jax
+
+        def synced(*a, **kw):
+            out = step_fn(*a, **kw)
+            jax.block_until_ready(out)
+            return out
+
+        return synced
+
+    def finalize(self, session) -> dict:
+        by_name: dict[str, float] = {}
+        for e in session.tracer.events:
+            by_name[e.name] = by_name.get(e.name, 0.0) + e.dur
+        return {
+            "events": len(session.tracer.events),
+            "dur_s_by_name": {k: round(v, 4) for k, v in sorted(by_name.items())},
+        }
+
+
+# ---------------------------------------------------------------------------
+# MegaScope — probes + perturbations through the model hooks
+# ---------------------------------------------------------------------------
+
+
+def _parse_probe(spec: str):
+    from repro.core.scope import ProbeSpec
+
+    pattern, _, compress = spec.partition(":")
+    return ProbeSpec(pattern, compress or "stats")
+
+
+def _parse_perturb(spec: str):
+    from repro.core.scope import PerturbSpec
+
+    parts = spec.split(":")
+    if len(parts) < 3:
+        raise ValueError(
+            f"perturb spec {spec!r}; want pattern:kind:amount[:layer]"
+        )
+    layer = int(parts[3]) if len(parts) > 3 else None
+    return PerturbSpec(parts[0], parts[1], float(parts[2]), layer)
+
+
+@register_plugin
+class ScopePlugin(ModulePlugin):
+    """Owns the session ScopeCollector, built from compact config strings."""
+
+    name = "scope"
+
+    def setup(self, session) -> None:
+        from repro.core.scope import ScopeCollector
+
+        sec = self.run_cfg.scope
+        self._probes = [_parse_probe(s) for s in sec.probes]
+        self._perturbs = [_parse_perturb(s) for s in sec.perturbs]
+        session.collector = ScopeCollector(
+            probes=self._probes, perturbs=self._perturbs
+        )
+        self._captured: dict[str, int] = {}
+
+    def on_step(self, session, events, metrics) -> None:
+        # captures ride the workload's metrics under a nested "captures"
+        # tree ({segment: {"<tag>.<compressor>": leaf}}); count leaf hits
+        def walk(prefix: str, node) -> None:
+            if isinstance(node, dict):
+                for k, v in node.items():
+                    walk(f"{prefix}{k}/" if isinstance(v, dict) else f"{prefix}{k}", v)
+            else:
+                self._captured[prefix] = self._captured.get(prefix, 0) + 1
+
+        caps = (metrics or {}).get("captures") if isinstance(metrics, dict) else None
+        if caps:
+            walk("", caps)
+
+    def finalize(self, session) -> dict:
+        return {
+            "probes": [f"{p.pattern}:{p.compress}" for p in self._probes],
+            "perturbs": len(self._perturbs),
+            "captured": dict(sorted(self._captured.items())),
+        }
+
+
+# ---------------------------------------------------------------------------
+# MegaFBD — heterogeneous placement + coordination check
+# ---------------------------------------------------------------------------
+
+
+@register_plugin
+class FbdPlugin(ModulePlugin):
+    """Forward/backward-decoupling coordination for the configured cluster.
+
+    ``setup`` plans virtual-rank placement over the section's heterogeneous
+    speed model and verifies launch-order deadlock freedom with the
+    bit-vector coordinator; ``finalize`` reports the decoupled-vs-colocated
+    speedup.  Host-side planning only — step numerics are untouched, so the
+    plugin composes with every workload.
+    """
+
+    name = "fbd"
+
+    def setup(self, session) -> None:
+        from repro.core.fbd.coordinator import ThreadProgram, run_with_coordinator
+        from repro.core.fbd.ranks import (
+            colocated_placement,
+            evaluate_placement,
+            plan_placement,
+        )
+
+        sec = self.run_cfg.fbd
+        n_slow = int(sec.n_devices * sec.slow_frac)
+        speed = {d: 1.0 for d in range(sec.n_devices - n_slow)}
+        speed |= {d: sec.slow_speed for d in range(sec.n_devices - n_slow, sec.n_devices)}
+        self.placement = plan_placement(sec.n_virtual, speed)
+        self._t_decoupled = evaluate_placement(self.placement)
+        self._t_colocated = evaluate_placement(
+            colocated_placement(sec.n_virtual, speed)
+        )
+        # coordination check: each virtual rank posts one all-ranks group and
+        # one pairwise group; the bit-vector protocol must order all of them
+        # without deadlock on this placement's control threads
+        vmap = self.placement.mapping
+        n_v = sec.n_virtual
+        groups = {0: tuple(range(n_v))}
+        groups |= {1 + i: (i, i + 1) for i in range(n_v - 1)}
+        programs = [
+            ThreadProgram(
+                vrank=v,
+                control=vmap.control_thread(vmap.fwd_device[v]),
+                group_ids=[0] + sorted(g for g, ms in groups.items() if g and v in ms),
+            )
+            for v in range(n_v)
+        ]
+        self._launch_order = run_with_coordinator(
+            programs, groups, n_controls=sec.n_devices
+        )
+
+    def finalize(self, session) -> dict:
+        return {
+            "decoupled_ms": round(self._t_decoupled * 1e3, 3),
+            "colocated_ms": round(self._t_colocated * 1e3, 3),
+            "speedup": round(self._t_colocated / self._t_decoupled, 3),
+            "coordinated_groups": len(self._launch_order),
+        }
+
+
+# ---------------------------------------------------------------------------
+# MegaDPP — pipeline planning + step-time telemetry
+# ---------------------------------------------------------------------------
+
+
+@register_plugin
+class DppPlugin(ModulePlugin):
+    """Plans the pipeline schedule for the configured topology at ``setup``
+    and folds observed step times in at ``finalize`` (the planner's
+    telemetry-driven ``replan`` path is exercised by the trace workload's
+    ``Diagnosis``; here the live loop contributes measured step dispersion).
+    """
+
+    name = "dpp"
+
+    def setup(self, session) -> None:
+        from repro.core.dpp.planner import Planner
+        from repro.core.simkit.workload import ModelProfile, Topology
+
+        sec = self.run_cfg.dpp
+        self.planner = Planner(
+            Topology(dp=sec.dp, pp=sec.pp, tp=sec.tp),
+            ModelProfile(n_chunks=sec.n_chunks),
+            n_micro=sec.n_micro,
+            memory_cap=int(sec.memory_cap_gib * (1 << 30)),
+        )
+        self.plan = self.planner.plan()
+        self._step_durs: list[float] = []
+
+    def on_step(self, session, events, metrics) -> None:
+        for e in events:
+            if e.name in ("train_step", "decode", "prefill", "verify"):
+                self._step_durs.append(e.dur)
+
+    def finalize(self, session) -> dict:
+        durs = np.asarray(self._step_durs)
+        out = {
+            "schedule": self.plan.schedule_name,
+            "wave": self.plan.wave,
+            "makespan_ms": round(self.plan.makespan * 1e3, 3),
+            "peak_memory_mib": self.plan.peak_memory >> 20,
+        }
+        if durs.size:
+            out["step_ms_p50"] = round(float(np.median(durs)) * 1e3, 3)
+            out["step_ms_max"] = round(float(durs.max()) * 1e3, 3)
+        return out

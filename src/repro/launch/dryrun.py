@@ -1,9 +1,13 @@
 import os
 import tempfile
 
+# REPRO_DRYRUN_DEVICES: forced host device count (default 512 = enough for
+# the 2x16x16 multi-pod mesh; CPU smoke runs with --host-mesh set a small
+# count — some container kernels cannot stand up 512 device threads)
+_N_DEV = int(os.environ.get("REPRO_DRYRUN_DEVICES", "512"))
 _DUMP_DIR = tempfile.mkdtemp(prefix="xla_spmd_dump_")
 os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
+    f"--xla_force_host_platform_device_count={_N_DEV} "
     f"--xla_dump_to={_DUMP_DIR} "
     "--xla_dump_hlo_pass_re=spmd-partitioning"
 )
@@ -13,13 +17,14 @@ on the production meshes and record memory / cost / collective analyses.
 
 The two lines above MUST stay first: jax locks the device count on first init.
 
-Usage:
-    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
-    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both \
+Usage (via the unified CLI — `python -m repro.launch.dryrun` still works as
+a deprecation shim with identical flags):
+
+    PYTHONPATH=src python -m repro dryrun --arch qwen3-14b --shape train_4k
+    PYTHONPATH=src python -m repro dryrun --all --multi-pod both \
         --out artifacts/dryrun
 """
 
-import argparse
 import json
 import time
 import traceback
@@ -61,10 +66,16 @@ def _compile_cell(cfg, shape, mesh, profile, grad_accum):
     return cell, compiled, _read_new_spmd_dump(snap)
 
 
+def _cost_analysis(compiled) -> dict:
+    # older jaxlibs return [per-device dict], newer a flat dict
+    cost = compiled.cost_analysis()
+    return cost[0] if isinstance(cost, (list, tuple)) else cost
+
+
 def _cost_vector(compiled, spmd_hlo: str | None = None) -> dict:
     from repro.launch.hlo_analysis import collective_stats
 
-    cost = compiled.cost_analysis()
+    cost = _cost_analysis(compiled)
     colls = collective_stats(spmd_hlo if spmd_hlo else compiled.as_text())
     return {
         "flops": float(cost.get("flops", 0.0)),
@@ -101,18 +112,22 @@ def run_cell(
     save_hlo: str | None = None,
     smoke: bool = False,
     probes: bool = True,
+    host_mesh: bool = False,
 ) -> dict:
     import jax
 
     from repro.configs import SHAPES, get_config
     from repro.launch.hlo_analysis import collective_stats
-    from repro.launch.mesh import make_production_mesh
+    from repro.launch.mesh import make_host_mesh, make_production_mesh
     from repro.launch.specs import input_specs, probe_pair
     from repro.models.model import active_param_count
 
     cfg = get_config(arch, smoke=smoke)
     shape = SHAPES[shape_name]
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    # host_mesh: lower/compile on a small host mesh instead of the 16x16
+    # production shape — the CPU-smoke path of `python -m repro dryrun`
+    mesh = (make_host_mesh() if host_mesh
+            else make_production_mesh(multi_pod=multi_pod))
     t0 = time.time()
     snap = _spmd_dump_snapshot()
     cell = input_specs(cfg, shape, mesh, profile=profile, grad_accum=grad_accum)
@@ -129,7 +144,7 @@ def run_cell(
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = _cost_analysis(compiled)
     hlo = compiled.as_text()
     colls = collective_stats(_read_new_spmd_dump(snap) or hlo)
 
@@ -202,39 +217,46 @@ def all_cells() -> list[tuple[str, str]]:
     return cells
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", type=str, default=None)
-    ap.add_argument("--shape", type=str, default=None)
-    ap.add_argument("--all", action="store_true")
-    ap.add_argument("--multi-pod", choices=["off", "on", "both"], default="off")
-    ap.add_argument("--profile", type=str, default=None)
-    ap.add_argument("--grad-accum", type=int, default=1)
-    ap.add_argument("--out", type=str, default="artifacts/dryrun")
-    ap.add_argument("--save-hlo", action="store_true")
-    ap.add_argument("--smoke", action="store_true")
-    args = ap.parse_args()
-
-    cells = all_cells() if args.all else [(args.arch, args.shape)]
-    pods = {"off": [False], "on": [True], "both": [False, True]}[args.multi_pod]
-    outdir = Path(args.out)
+def run_cells(
+    *,
+    arch: str | None = None,
+    shape: str | None = None,
+    run_all: bool = False,
+    multi_pod: str = "off",
+    profile: str | None = None,
+    grad_accum: int = 1,
+    out: str = "artifacts/dryrun",
+    save_hlo: bool = False,
+    smoke: bool = False,
+    host_mesh: bool = False,
+) -> dict:
+    """Run a sweep of (arch x shape x pod) cells; the `python -m repro
+    dryrun` workload body.  Always finishes the sweep and returns
+    {tag: result-or-{"error": ...}} — exit policy is the CLI's job."""
+    cells = all_cells() if run_all else [(arch, shape)]
+    pods = {"off": [False], "on": [True], "both": [False, True]}[multi_pod]
+    outdir = Path(out)
     outdir.mkdir(parents=True, exist_ok=True)
 
-    failures = 0
-    for arch, shape in cells:
+    results: dict[str, dict] = {}
+    for arch_i, shape_i in cells:
         for mp in pods:
-            tag = f"{arch}__{shape}__{'pod2' if mp else 'pod1'}"
-            if args.profile:
-                tag += f"__{args.profile}"
+            tag = f"{arch_i}__{shape_i}__{'pod2' if mp else 'pod1'}"
+            if profile:
+                tag += f"__{profile}"
+            if host_mesh:
+                tag += "__host"
             dest = outdir / f"{tag}.json"
             try:
                 res = run_cell(
-                    arch, shape, mp,
-                    profile=args.profile,
-                    grad_accum=args.grad_accum,
-                    save_hlo=str(outdir / f"{tag}.hlo") if args.save_hlo else None,
-                    smoke=args.smoke,
+                    arch_i, shape_i, mp,
+                    profile=profile,
+                    grad_accum=grad_accum,
+                    save_hlo=str(outdir / f"{tag}.hlo") if save_hlo else None,
+                    smoke=smoke,
+                    host_mesh=host_mesh,
                 )
+                results[tag] = res
                 dest.write_text(json.dumps(res, indent=1))
                 corr = res.get("corrected") or {}
                 print(
@@ -245,11 +267,27 @@ def main() -> None:
                     flush=True,
                 )
             except Exception as e:  # noqa: BLE001 - record and continue
-                failures += 1
+                results[tag] = {"error": f"{type(e).__name__}: {e}"}
                 dest.with_suffix(".err").write_text(traceback.format_exc())
                 print(f"FAIL {tag}: {type(e).__name__}: {e}", flush=True)
-    if failures:
-        raise SystemExit(f"{failures} cell(s) failed")
+    return results
+
+
+def main(argv: list[str] | None = None) -> None:
+    """Deprecated launcher: delegates to `python -m repro dryrun` (the flags
+    are identical).  Kept so existing invocations keep working."""
+    import sys
+    import warnings
+
+    warnings.warn(
+        "python -m repro.launch.dryrun is deprecated; use "
+        "`python -m repro dryrun`",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.app.cli import main as cli_main
+
+    cli_main(["dryrun"] + (sys.argv[1:] if argv is None else list(argv)))
 
 
 if __name__ == "__main__":

@@ -15,8 +15,13 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh(data: int = 2, model: int = 4) -> jax.sharding.Mesh:
-    """Small mesh over whatever local devices exist (CPU tests)."""
+def make_host_mesh(data: int = 4, model: int = 2) -> jax.sharding.Mesh:
+    """Small mesh over whatever local devices exist (CPU tests).
+
+    Defaults to data=4/model=2 (not 2x4): this jaxlib's CPU backend
+    reproducibly segfaults compiling SPMD programs on a 2x4 data/model
+    mesh, while the transposed shape compiles fine.
+    """
     n = len(jax.devices())
     data = min(data, n)
     model = max(1, min(model, n // data))

@@ -1,167 +1,37 @@
-"""Serving launcher.
+"""Deprecated serving launcher — use ``python -m repro serve``.
 
-Static lockstep batch (the original path):
-
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
-        --batch 4 --prompt-len 32 --max-new 16
-
-MegaServe continuous batching (paged KV cache + request scheduler) over a
-mixed-length Poisson-arrival workload:
+This module is a thin shim kept so existing invocations keep working with
+identical outputs (the flag set is unchanged; the new CLI accepts it
+verbatim):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
         --continuous --requests 16 --rate 100 --slots 4 --max-new 16
+
+delegates to
+
+    PYTHONPATH=src python -m repro serve --arch qwen2-0.5b --smoke \
+        --continuous --requests 16 --rate 100 --slots 4 --max-new 16
+
+Engine construction now lives in ``repro.app.session.Session.serve`` /
+``MegaServe.from_session`` (module plugins supply the tracer/collector).
 """
 
 from __future__ import annotations
 
-import argparse
-import time
-
-import jax
-import jax.numpy as jnp
-
-from repro.configs import get_config
-from repro.launch.mesh import make_host_mesh
-from repro.models import get_model
-from repro.parallel.profiles import rules_for
-from repro.parallel.sharding import axis_rules
-from repro.serve.engine import make_decode_step, make_prefill_step
-from repro.serve.sampler import sample
+import sys
+import warnings
 
 
-def _run_continuous(cfg, args) -> None:
-    from dataclasses import replace
-
-    from repro.serve import MegaServe, get_drafter
-    from repro.serve.server import make_poisson_workload
-
-    m = get_model(cfg)
-    params = m.init(cfg, jax.random.PRNGKey(0))
-    specs, prompts, serve_cfg = make_poisson_workload(
-        cfg,
-        n=args.requests, rate=args.rate,
-        prompt_lens=tuple(int(x) for x in args.prompt_lens.split(",")),
-        max_new_range=(max(1, args.max_new // 4), args.max_new),
-        num_slots=args.slots, block_size=args.block_size,
-        num_blocks=args.num_blocks, seed=args.seed,
+def main(argv: list[str] | None = None) -> None:
+    warnings.warn(
+        "python -m repro.launch.serve is deprecated; use "
+        "`python -m repro serve` (same flags, plus --modules/--set)",
+        DeprecationWarning,
+        stacklevel=2,
     )
-    serve_cfg = replace(
-        serve_cfg, decode_path=args.decode_path,
-        spec_decode=args.spec_decode, spec_k=args.spec_k,
-    )
-    drafter = None
-    if args.spec_decode and args.drafter != "ngram":
-        drafter = get_drafter(args.drafter, vocab_size=cfg.vocab_size,
-                              seed=args.seed)
-    srv = MegaServe(cfg, params, serve_cfg, drafter=drafter)
-    for s in specs:
-        srv.submit(prompts[s.rid], s.max_new, arrival=s.arrival)
-    outs = srv.drain()
-    met = srv.metrics()
-    print(f"arch={cfg.name} continuous slots={args.slots} "
-          f"blocks={serve_cfg.num_blocks}x{serve_cfg.block_size} "
-          f"requests={len(specs)} decode_path={srv.decode_path}"
-          + (f" spec_k={args.spec_k} drafter={args.drafter}"
-             if args.spec_decode else ""))
-    keys = ["generated_tokens", "wall_s", "tokens_per_s", "ttft_p50_s",
-            "ttft_p99_s", "latency_p50_s", "latency_p99_s", "preemptions",
-            "steps"]
-    if args.spec_decode:
-        keys += ["spec_proposed", "spec_accepted", "spec_accept_rate"]
-    for k in keys:
-        v = met[k]
-        print(f"  {k:16s} {v:.4f}" if isinstance(v, float) else f"  {k:16s} {v}")
-    for rid in list(outs)[:2]:
-        print(f"  req {rid}: {outs[rid][:12]}...")
+    from repro.app.cli import main as cli_main
 
-
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    # MegaServe continuous batching
-    ap.add_argument("--continuous", action="store_true",
-                    help="continuous batching via MegaServe (paged KV cache)")
-    ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--rate", type=float, default=100.0,
-                    help="Poisson arrival rate, requests/s")
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--block-size", type=int, default=16)
-    ap.add_argument("--num-blocks", type=int, default=0,
-                    help="physical KV blocks (0 = size for zero preemption)")
-    ap.add_argument("--prompt-lens", default="16,32,64,128,256")
-    ap.add_argument("--decode-path", default="auto",
-                    choices=("auto", "paged", "gathered"),
-                    help="paged = no-gather block-pool decode (default when "
-                         "supported); gathered = dense-view oracle")
-    ap.add_argument("--spec-decode", action="store_true",
-                    help="speculative decoding: draft + batched paged "
-                         "verification (attention-only families)")
-    ap.add_argument("--spec-k", type=int, default=4,
-                    help="max draft tokens verified per step")
-    ap.add_argument("--drafter", default="ngram",
-                    choices=("ngram", "random"),
-                    help="draft proposer (random = adversarial baseline)")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
-    cfg = get_config(args.arch, smoke=args.smoke)
-    if args.continuous:
-        if cfg.input_kind != "tokens":
-            raise SystemExit(f"{cfg.name}: continuous serving needs token archs")
-        if args.temperature != 0.0:
-            raise SystemExit(
-                "--continuous decodes greedily (preemption-by-recompute "
-                "requires deterministic decode); drop --temperature"
-            )
-        _run_continuous(cfg, args)
-        return
-    if cfg.input_kind != "tokens" and cfg.family != "encdec":
-        raise SystemExit(f"{cfg.name} needs a modality frontend; serve tokens archs")
-    m = get_model(cfg)
-    mesh = make_host_mesh()
-    rules = rules_for(cfg, "decode")
-
-    with mesh, axis_rules(mesh, rules):
-        params = m.init(cfg, jax.random.PRNGKey(0))
-        B, P = args.batch, args.prompt_len
-        cache_len = P + args.max_new
-        cache = (m.init_cache(cfg, B, cache_len, P) if cfg.family == "encdec"
-                 else m.init_cache(cfg, B, cache_len))
-        prompts = jax.random.randint(jax.random.PRNGKey(1), (B, P), 2, cfg.vocab_size)
-        batch = {"tokens": prompts}
-        if cfg.family == "encdec":
-            batch["embeds"] = jax.random.normal(
-                jax.random.PRNGKey(2), (B, P, cfg.d_model), jnp.bfloat16)
-
-        prefill = jax.jit(make_prefill_step(cfg))
-        decode = jax.jit(make_decode_step(cfg, temperature=args.temperature))
-
-        t0 = time.perf_counter()
-        cache, logits = prefill(params, batch, cache)
-        jax.block_until_ready(logits)
-        t_prefill = time.perf_counter() - t0
-        tok = sample(logits, temperature=args.temperature)
-
-        outs = [tok]
-        t0 = time.perf_counter()
-        for i in range(args.max_new - 1):
-            cache, logits, tok = decode(params, cache, tok, jnp.int32(P + i))
-            outs.append(tok)
-        jax.block_until_ready(outs[-1])
-        t_decode = time.perf_counter() - t0
-
-    gen = jnp.stack(outs, axis=1)
-    print(f"arch={cfg.name} batch={B} prompt={P} new={args.max_new}")
-    print(f"prefill: {t_prefill*1e3:.1f} ms ({B*P/t_prefill:.0f} tok/s)")
-    print(f"decode : {t_decode*1e3:.1f} ms "
-          f"({B*(args.max_new-1)/max(t_decode,1e-9):.0f} tok/s)")
-    for b in range(min(B, 2)):
-        print(f"  seq {b}: {[int(t) for t in gen[b][:12]]}...")
+    cli_main(["serve"] + (sys.argv[1:] if argv is None else list(argv)))
 
 
 if __name__ == "__main__":

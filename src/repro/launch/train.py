@@ -1,86 +1,35 @@
-"""Production training launcher.
+"""Deprecated training launcher — use ``python -m repro train``.
 
-Builds the mesh (production 16x16 / 2x16x16 when the device fleet provides it,
-else a host-device mesh), installs the architecture's sharding profile, and
-runs the jitted train loop with checkpointing and MegaScan tracing.
+This module is a thin shim kept so existing invocations keep working with
+identical outputs (the flag set is unchanged; the new CLI accepts it
+verbatim):
 
-    # on a real fleet (or with --xla_force_host_platform_device_count set):
-    PYTHONPATH=src python -m repro.launch.train --arch qwen3-14b --steps 100
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke
 
-    # CPU smoke (reduced config, host mesh):
-    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \
-        --steps 20
+delegates to
+
+    PYTHONPATH=src python -m repro train --arch qwen2-0.5b --smoke
+
+Mesh selection, sharding-rule installation, chrome-trace export and module
+toggles now live in ``repro.app`` (Session + plugins).
 """
 
 from __future__ import annotations
 
-import argparse
-import logging
-
-import jax
-
-from repro.configs import get_config
-from repro.core.tracing.chrome import save_chrome
-from repro.core.tracing.tracer import Tracer
-from repro.data.pipeline import DataConfig
-from repro.launch.mesh import make_host_mesh, make_production_mesh
-from repro.parallel.profiles import rules_for
-from repro.parallel.sharding import axis_rules
-from repro.train.loop import LoopConfig, train
-from repro.train.optim import OptimizerConfig
+import sys
+import warnings
 
 
-def pick_mesh(multi_pod: bool):
-    n = len(jax.devices())
-    if multi_pod and n >= 512:
-        return make_production_mesh(multi_pod=True)
-    if n >= 256:
-        return make_production_mesh(multi_pod=False)
-    return make_host_mesh()
+def main(argv: list[str] | None = None) -> None:
+    warnings.warn(
+        "python -m repro.launch.train is deprecated; use "
+        "`python -m repro train` (same flags, plus --modules/--set)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.app.cli import main as cli_main
 
-
-def main() -> None:
-    logging.basicConfig(level=logging.INFO, format="%(message)s")
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--steps", type=int, default=100)
-    ap.add_argument("--global-batch", type=int, default=None)
-    ap.add_argument("--seq-len", type=int, default=None)
-    ap.add_argument("--lr", type=float, default=3e-4)
-    ap.add_argument("--schedule", default="cosine",
-                    choices=("cosine", "wsd", "constant"))
-    ap.add_argument("--grad-accum", type=int, default=1)
-    ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--trace-out", default=None)
-    args = ap.parse_args()
-
-    cfg = get_config(args.arch, smoke=args.smoke)
-    mesh = pick_mesh(args.multi_pod)
-    rules = rules_for(cfg, "train")
-    seq = args.seq_len or (128 if args.smoke else 4096)
-    batch = args.global_batch or (8 if args.smoke else 256)
-    # minicpm trains with WSD per its paper
-    schedule = "wsd" if (cfg.name.startswith("minicpm") and args.schedule == "cosine") \
-        else args.schedule
-
-    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq, global_batch=batch)
-    ocfg = OptimizerConfig(lr=args.lr, schedule=schedule,
-                           warmup_steps=max(args.steps // 10, 5),
-                           total_steps=args.steps)
-    loop = LoopConfig(n_steps=args.steps, log_every=max(args.steps // 10, 1),
-                      ckpt_dir=args.ckpt_dir, grad_accum=args.grad_accum)
-    tracer = Tracer(0, enabled=True)
-
-    print(f"arch={cfg.name} mesh={dict(mesh.shape)} tokens/step={batch * seq}")
-    with mesh, axis_rules(mesh, rules):
-        state, history = train(cfg, ocfg, data, loop, tracer=tracer)
-    for h in history:
-        print(f"step {h['step']:>5}  loss {h['loss']:.4f}  lr {h.get('lr', 0):.2e}")
-    if args.trace_out:
-        save_chrome(tracer.events, args.trace_out)
-        print(f"trace -> {args.trace_out}")
+    cli_main(["train"] + (sys.argv[1:] if argv is None else list(argv)))
 
 
 if __name__ == "__main__":

@@ -97,10 +97,14 @@ class MegaServe:
         clock: Callable[[], float] | None = None,
         drafter: Drafter | None = None,
         use_jit: bool = True,
+        wrap_step: Callable[[Callable], Callable] | None = None,
     ):
         self.cfg = cfg
         self.serve_cfg = serve_cfg
         self.params = params
+        # decorator applied to every jitted engine step (prefill / decode /
+        # spec-verify) — the ModulePlugin.wrap_step attach point
+        self._wrap = wrap_step if wrap_step is not None else (lambda f: f)
         self.sched = Scheduler(serve_cfg)
         self.tracer = tracer or Tracer(rank=0, enabled=True)
         self.collector = collector
@@ -175,7 +179,7 @@ class MegaServe:
 
         # donate the pool: it is the largest buffer in the program and every
         # step rewrites it, so double-buffering it would waste a full KV pool
-        self._decode = (
+        self._decode = self._wrap(
             jax.jit(decode_fn, donate_argnums=(1,)) if use_jit else decode_fn
         )
 
@@ -204,7 +208,7 @@ class MegaServe:
                 cfg, collector, block_size=serve_cfg.block_size,
                 paged_flags=self.kv.paged, impl=serve_cfg.paged_attn_impl,
             )
-            self._spec_step = (
+            self._spec_step = self._wrap(
                 jax.jit(spec_fn, donate_argnums=(1,)) if use_jit else spec_fn
             )
 
@@ -217,6 +221,19 @@ class MegaServe:
         # they compile per exact prompt length instead
         leaves = jax.tree.leaves(self.kv.paged)
         self._pad_prefill = bool(leaves) and all(leaves)
+
+    @classmethod
+    def from_session(cls, session, params: Any, serve_cfg: ServeConfig, **kw):
+        """Construct a server wired to a ``repro.app.Session``: the session's
+        MegaScan tracer and MegaScope collector (claimed by whichever module
+        plugins are enabled) become this server's, and every jitted engine
+        step runs through the plugins' ``wrap_step`` chain — so serving
+        emits through the same observability spine as every workload."""
+        return cls(
+            session.model_cfg, params, serve_cfg,
+            collector=session.collector, tracer=session.tracer,
+            wrap_step=session.wrap_step, **kw,
+        )
 
     # -------------------------------------------------------------- intake
     def submit(
@@ -267,7 +284,7 @@ class MegaServe:
             pool = self.kv.scatter_prefill(pool, filled, slot, phys)
             return pool, jnp.argmax(logits, -1), caps
 
-        fn = (
+        fn = self._wrap(
             jax.jit(prefill_fn, donate_argnums=(3,))
             if self._use_jit else prefill_fn
         )
@@ -512,15 +529,26 @@ class MegaServe:
         self.streams[rid].append(StreamItem(self.step_idx, tok, captures))
 
     # -------------------------------------------------------------- drain
-    def drain(self, max_steps: int = 100_000) -> dict[int, list[int]]:
+    def drain(
+        self,
+        max_steps: int = 100_000,
+        *,
+        on_step: Callable[[list, dict], None] | None = None,
+    ) -> dict[int, list[int]]:
         """Run until every submitted request finishes; returns token streams.
 
         ``max_steps`` bounds productive engine steps and (separately) idle
         ticks spent waiting for future arrivals; with an injected clock that
-        never reaches the next arrival this raises instead of spinning."""
+        never reaches the next arrival this raises instead of spinning.
+        ``on_step(events, report)`` observes each tick — the TraceEvents it
+        emitted and the scheduler report — which is how Session plugins
+        attach to the serving loop."""
         work = idle = 0
         while not self.sched.all_done:
+            n_ev = len(self.tracer.events)
             out = self.step()
+            if on_step is not None:
+                on_step(self.tracer.events[n_ev:], out)
             if out["admitted"] or out["active"]:
                 work += 1
                 idle = 0

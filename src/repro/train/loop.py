@@ -1,9 +1,11 @@
 """End-to-end training driver: data pipeline + jitted train step + async
 checkpointing + MegaScan tracing + optional MegaScope probes + failover.
 
-Used by examples/train_lm.py and the fault-tolerance tests; the same loop
-drives the multi-pod configuration (the jit step is mesh-agnostic — shardings
-come from the installed axis rules).
+The `python -m repro train` workload drives this loop through
+``repro.app.Session`` (module plugins attach via :class:`StepHooks`); the
+fault-tolerance tests call ``train`` directly.  The same loop drives the
+multi-pod configuration (the jit step is mesh-agnostic — shardings come
+from the installed axis rules).
 """
 
 from __future__ import annotations
@@ -37,6 +39,19 @@ class LoopConfig:
     grad_accum: int = 1
 
 
+@dataclass
+class StepHooks:
+    """Plugin attach points threaded in by ``repro.app.Session``.
+
+    ``wrap_step`` decorates the jitted step callable once, before the loop;
+    ``on_step(events, metrics)`` observes each completed step — the MegaScan
+    ``TraceEvent``s it appended and its (possibly device-resident) metrics.
+    """
+
+    wrap_step: Callable[[Callable], Callable] | None = None
+    on_step: Callable[[list, dict], None] | None = None
+
+
 def train(
     cfg: ModelConfig,
     ocfg: OptimizerConfig,
@@ -46,8 +61,11 @@ def train(
     collector=NULL_COLLECTOR,
     tracer: Tracer | None = None,
     state=None,
+    hooks: StepHooks | None = None,
 ) -> tuple[Any, list[dict]]:
-    tracer = tracer or Tracer(0, enabled=False)
+    # tracing defaults ON, matching MegaServe — the repo-wide documented
+    # default (observability is always-on; pass a disabled Tracer to opt out)
+    tracer = tracer or Tracer(rank=0, enabled=True)
     ds = SyntheticTokens(data_cfg)
     if state is None:
         with tracer.scope("init", op="init"):
@@ -57,6 +75,8 @@ def train(
         make_train_step(cfg, ocfg, grad_accum=loop.grad_accum, collector=collector),
         donate_argnums=0,
     )
+    if hooks is not None and hooks.wrap_step is not None:
+        step_fn = hooks.wrap_step(step_fn)
 
     start = 0
     ckpt = None
@@ -72,8 +92,11 @@ def train(
     t0 = time.perf_counter()
     for step in range(start, loop.n_steps):
         batch = ds.batch_at(step)
+        n_ev = len(tracer.events)
         with tracer.scope("train_step", op="train_step", mb=step):
             state, metrics = step_fn(state, batch)
+        if hooks is not None and hooks.on_step is not None:
+            hooks.on_step(tracer.events[n_ev:], metrics)
         if (step + 1) % loop.log_every == 0 or step == loop.n_steps - 1:
             m = {k: float(v) for k, v in metrics.items()
                  if hasattr(v, "ndim") and v.ndim == 0}

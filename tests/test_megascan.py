@@ -37,7 +37,7 @@ def _trace(faults=None, clocks=None, n_iters=2, topo=TOPO):
 
 
 def test_tracer_scope_and_gather():
-    tr0, tr1 = Tracer(0), Tracer(1)
+    tr0, tr1 = Tracer(rank=0), Tracer(rank=1)
     with tr0.scope("fwd", mb=0, op="fwd"):
         time.sleep(0.002)
     with tr1.scope("allreduce", kind="coll", group=(0, 1), bytes=1024):
@@ -49,7 +49,7 @@ def test_tracer_scope_and_gather():
 
 
 def test_tracer_disabled_is_zero_cost_path():
-    tr = Tracer(0, enabled=False)
+    tr = Tracer(rank=0, enabled=False)
     with tr.scope("x"):
         pass
     assert tr.events == []
