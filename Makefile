@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test ci cli-smoke bench-serve docs-check deps deps-dev
+.PHONY: test ci cli-smoke bench-serve bench-pp docs-check deps deps-dev
 
 # tier-1 verification
 test:
@@ -18,12 +18,17 @@ cli-smoke:
 	python -m repro serve --arch qwen2-0.5b --smoke --continuous \
 		--requests 8 --max-new 8 --rate 500
 
-ci: test docs-check cli-smoke
+ci: test docs-check cli-smoke bench-pp
 
 # decode-latency-vs-max_len sweep (paged vs gathered) + continuous-vs-static;
 # persists the perf trajectory to BENCH_serve.json
 bench-serve:
 	python benchmarks/serve_bench.py --smoke --sweep --out BENCH_serve.json
+
+# pipeline-schedule sweep (simkit + real executor on a pp=2 host mesh);
+# asserts pipelined-vs-reference loss parity and persists BENCH_pp.json
+bench-pp:
+	python benchmarks/pp_bench.py --out BENCH_pp.json
 
 deps:
 	pip install -r requirements.txt

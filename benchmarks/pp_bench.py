@@ -1,0 +1,185 @@
+"""Pipeline-parallel schedule sweep: bubble fraction + step time + parity.
+
+Two layers of measurement, persisted to ``BENCH_pp.json``:
+
+* **simkit** — every named traversal (``SCHEDULE_NAMES``, incl. the
+  ZB-inspired B/W split) lowered via ``build_training_step`` and timed on the
+  discrete-event engine: makespan + bubble fraction vs the zero-bubble ideal
+  (``n_micro * (fwd + bwd)`` per stage);
+* **executor** — the real thing: a tiny fp32 dense transformer trained
+  through ``core.dpp.executor.pipeline_apply`` on a pp=2 host-device mesh,
+  per-schedule forward-table bubble fraction, measured step wall time, and a
+  hard parity gate: 3-step loss trajectory vs the non-pipelined reference
+  step to fp32 tolerance (1f1b + wave at minimum — the acceptance bar).
+
+    PYTHONPATH=src python benchmarks/pp_bench.py --out BENCH_pp.json
+    make bench-pp
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.dpp.executor import build_time_table, bubble_fraction
+from repro.core.simkit.engine import Engine
+from repro.core.simkit.workload import (
+    ModelProfile,
+    SCHEDULE_NAMES,
+    Topology,
+    build_training_step,
+)
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.launch.mesh import make_pipeline_mesh
+from repro.parallel.plan import ParallelPlan, forward_order, resolve_plan
+from repro.train.optim import OptimizerConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+TINY = ModelConfig(
+    name="pp-bench-tiny", family="dense", num_layers=4, d_model=64,
+    num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256,
+    attn_kv_chunk=32, logits_chunk=32, vocab_pad_to=64,
+    param_dtype="float32", compute_dtype="float32", remat="none",
+)
+
+EXEC_SCHEDULES = ("1f1b", "wave", "dfc", "bfc")
+
+
+def sim_sweep(pp: int, n_chunks: int, micros: tuple[int, ...]) -> dict:
+    """Schedule comparison on the discrete-event engine (incl. zb)."""
+    topo = Topology(dp=1, pp=pp, tp=1)
+    prof = ModelProfile(n_chunks=n_chunks)
+    out: dict[str, dict] = {}
+    for name in SCHEDULE_NAMES:
+        per_micro = {}
+        for nm in micros:
+            res = Engine().run(
+                build_training_step(topo, prof, n_micro=nm, schedule=name)
+            )
+            ideal = nm * n_chunks * (prof.fwd_time + prof.bwd_time)
+            per_micro[str(nm)] = {
+                "makespan_ms": round(res.makespan * 1e3, 4),
+                "bubble_frac": round(1.0 - ideal / res.makespan, 4),
+            }
+        out[name] = per_micro
+    return out
+
+
+def executor_sweep(
+    pp: int, n_chunks: int, micros: tuple[int, ...], *, steps: int
+) -> tuple[dict, dict]:
+    """Real pipelined train steps on a host-device stage mesh + parity gate."""
+    mesh = make_pipeline_mesh(pp)
+    ocfg = OptimizerConfig(lr=1e-3, warmup_steps=2, total_steps=steps)
+    results: dict[str, dict] = {}
+    parity: dict[str, dict] = {}
+
+    for nm in micros:
+        data = DataConfig(vocab_size=TINY.vocab_size, seq_len=32,
+                          global_batch=nm)
+        ds = SyntheticTokens(data)
+
+        def losses_of(step_fn, n=steps):
+            state = init_train_state(TINY, jax.random.PRNGKey(0))
+            fn = jax.jit(step_fn)
+            out, wall = [], []
+            for i in range(n):
+                batch = ds.batch_at(i)
+                jax.block_until_ready(batch["tokens"])
+                t0 = time.perf_counter()
+                state, m = fn(state, batch)
+                jax.block_until_ready(m["loss"])
+                wall.append(time.perf_counter() - t0)
+                out.append(float(m["loss"]))
+            return out, wall
+
+        ref_losses, _ = losses_of(make_train_step(TINY, ocfg))
+        for name in EXEC_SCHEDULES:
+            plan = resolve_plan(ParallelPlan(
+                pp=pp, n_micro=nm, n_chunks=n_chunks, schedule=name,
+            ))
+            table = build_time_table(
+                forward_order(plan), pp, n_chunks, nm
+            )
+            pp_losses, wall = losses_of(
+                make_train_step(TINY, ocfg, plan=plan, mesh=mesh)
+            )
+            key = f"{name}@m{nm}"
+            # steady-state step time: min over post-compile steps
+            results.setdefault(name, {})[f"n_micro={nm}"] = {
+                "wave": plan.wave,
+                "table_steps": table.steps,
+                "bubble_frac": round(bubble_fraction(table), 4),
+                "step_ms_min": round(min(wall[1:] or wall) * 1e3, 3),
+            }
+            max_rel = max(
+                abs(a - b) / max(abs(b), 1e-9)
+                for a, b in zip(pp_losses, ref_losses)
+            )
+            parity[key] = {
+                "ref_losses": [round(x, 6) for x in ref_losses],
+                "pp_losses": [round(x, 6) for x in pp_losses],
+                "max_rel_err": max_rel,
+                "ok": bool(max_rel < 1e-4),
+            }
+    return results, parity
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pp", type=int, default=2)
+    ap.add_argument("--n-chunks", type=int, default=2)
+    ap.add_argument("--micros", type=str, default="4,8")
+    ap.add_argument("--steps", type=int, default=3)
+    ap.add_argument("--out", default="", help="write BENCH_pp.json")
+    args = ap.parse_args()
+    micros = tuple(int(x) for x in args.micros.split(","))
+
+    sim = sim_sweep(args.pp, args.n_chunks, micros)
+    print("simkit sweep (makespan / bubble):")
+    for name, per in sim.items():
+        print(f"  {name:6s} " + "  ".join(
+            f"m={nm}: {v['makespan_ms']:.2f}ms b={v['bubble_frac']:.3f}"
+            for nm, v in per.items()))
+
+    execu, parity = executor_sweep(
+        args.pp, args.n_chunks, micros, steps=args.steps
+    )
+    print("executor sweep (pp=%d, chunks=%d):" % (args.pp, args.n_chunks))
+    for name, per in execu.items():
+        for k, v in per.items():
+            print(f"  {name:6s} {k}: bubble={v['bubble_frac']:.3f} "
+                  f"step={v['step_ms_min']:.2f}ms (T={v['table_steps']})")
+
+    bad = {k: v for k, v in parity.items() if not v["ok"]}
+    for k, v in parity.items():
+        print(f"  parity {k}: max_rel_err={v['max_rel_err']:.2e} "
+              f"{'OK' if v['ok'] else 'FAIL'}")
+    results = {
+        "pp": args.pp,
+        "n_chunks": args.n_chunks,
+        "sim": sim,
+        "executor": execu,
+        "parity": {k: v for k, v in sorted(parity.items())},
+        "backend": jax.default_backend(),
+    }
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+        print(f"wrote {args.out}")
+    if bad:
+        raise SystemExit(
+            f"pipeline-vs-reference parity FAILED for {sorted(bad)}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -45,6 +45,12 @@ _SHARED = [
 ]
 
 _TRAIN = [
+    ("--pp", "parallel.pp", dict(
+        type=int, help="pipeline stages (>1 routes blocks through MegaDPP)")),
+    ("--pp-schedule", "parallel.schedule", dict(
+        choices=("1f1b", "dfc", "bfc", "wave"))),
+    ("--n-micro", "parallel.n_micro", dict(
+        type=int, help="pipeline microbatches per step (0 = 2*pp)")),
     ("--steps", "train.steps", dict(type=int)),
     ("--global-batch", "train.global_batch", dict(type=int)),
     ("--seq-len", "train.seq_len", dict(type=int)),
@@ -161,6 +167,20 @@ def run(argv: list[str]) -> dict:
         # device count + SPMD dump dir) at module import
         import repro.launch.dryrun  # noqa: F401
 
+    if workload == "train" and cfg.parallel.pp > 1:
+        # pipeline meshes need pp*dp*tp devices; on a CPU-only host, force
+        # the host platform to expose that many (inert on real fleets, and
+        # a no-op if the user already set the flag).  Like dryrun, this must
+        # precede backend init — nothing above imports jax.
+        import os
+
+        world = cfg.parallel.pp * cfg.parallel.dp * cfg.parallel.tp
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count={world}"
+            ).strip()
+
     from repro.app.session import Session
 
     try:
@@ -223,7 +243,8 @@ def run(argv: list[str]) -> dict:
                   f"{'CORRECT' if t['detected'] else 'MISMATCH'} "
                   f"(truth={t['slow_ranks']})")
     _print_results({k: v for k, v in session.results.items()
-                    if k in ("scan", "scope", "fbd", "dpp", "trace_out")})
+                    if k in ("scan", "scope", "fbd", "dpp", "parallel",
+                             "trace_out")})
     return session.results
 
 

@@ -43,6 +43,29 @@ class TrainSection:
 
 
 @dataclass
+class ParallelSection:
+    """Parallelization plan for the train workload (``parallel.*``).
+
+    ``pp > 1`` routes the block stack through the MegaDPP pipeline executor
+    on a (stage, data, model) mesh; ``schedule`` picks the traversal
+    (``1f1b``/``dfc``/``bfc``/``wave``) and ``wave=0`` with ``schedule=wave``
+    lets the MegaDPP planner choose the wave width under ``dpp.memory_cap_gib``.
+    ``fbd_backward`` attaches MegaFBD's decoupled backward as the gradient
+    path.  ``dp``/``tp`` > 1 combined with ``pp`` > 1 raises for now (the
+    pipelined step would silently replicate compute over those axes).
+    """
+
+    dp: int = 1
+    tp: int = 1
+    pp: int = 1
+    n_micro: int = 0               # 0 -> 2*pp when pp>1
+    n_chunks: int = 1
+    schedule: str = "1f1b"         # 1f1b | dfc | bfc | wave
+    wave: int = 0                  # 0 = planner chooses (schedule=wave)
+    fbd_backward: bool = False
+
+
+@dataclass
 class ServeSection:
     """Serving-workload knobs (mirrors the legacy launcher flag set)."""
 
@@ -149,6 +172,7 @@ class RunConfig:
     modules: tuple[str, ...] = ("scan",)
     mesh: str = "auto"             # auto | auto-mp | host | pod1 | pod2
     trace_out: str = ""            # chrome-trace export path (any workload)
+    parallel: ParallelSection = field(default_factory=ParallelSection)
     train: TrainSection = field(default_factory=TrainSection)
     serve: ServeSection = field(default_factory=ServeSection)
     scan: ScanSection = field(default_factory=ScanSection)

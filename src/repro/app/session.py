@@ -178,6 +178,26 @@ class Session:
             schedule = "wsd"
         return seq, batch, schedule
 
+    def parallel_plan(self):
+        """Resolve the ``parallel`` section into a ``ParallelPlan`` (pp>1) or
+        ``None`` (the plain DP/TP path).  Wave resolution — ``schedule=wave``
+        with ``wave=0`` — runs MegaDPP's planner under the ``dpp`` section's
+        memory cap."""
+        par = self.run_cfg.parallel
+        if par.pp <= 1:
+            return None
+        from repro.parallel.plan import ParallelPlan, resolve_plan
+
+        return resolve_plan(
+            ParallelPlan(
+                dp=par.dp, tp=par.tp, pp=par.pp,
+                n_micro=par.n_micro, n_chunks=par.n_chunks,
+                schedule=par.schedule, wave=par.wave,
+                fbd_backward=par.fbd_backward,
+            ),
+            memory_cap_gib=self.run_cfg.dpp.memory_cap_gib,
+        )
+
     def train(self):
         """The training workload: returns ``(state, history)``."""
         from repro.data.pipeline import DataConfig
@@ -205,14 +225,29 @@ class Session:
             grad_accum=t.grad_accum,
             seed=rc.seed,
         )
-        mesh = self.mesh()
+        plan = self.parallel_plan()
+        if plan is not None:
+            from repro.launch.mesh import make_pipeline_mesh
+            from repro.parallel.plan import plan_summary
+
+            if batch % plan.n_micro != 0:
+                raise ValueError(
+                    f"global batch {batch} not divisible by "
+                    f"parallel.n_micro={plan.n_micro}"
+                )
+            mesh = make_pipeline_mesh(plan.pp, plan.dp, plan.tp)
+            self.results["parallel"] = {
+                **plan_summary(plan), "mesh": dict(mesh.shape),
+            }
+        else:
+            mesh = self.mesh()
         log.info("arch=%s mesh=%s tokens/step=%d",
                  cfg.name, dict(mesh.shape), batch * seq)
         with mesh, axis_rules(mesh, self.sharding_rules("train")):
             state, history = train(
                 cfg, ocfg, data, loop,
                 collector=self.collector, tracer=self.tracer,
-                hooks=self.step_hooks(),
+                hooks=self.step_hooks(), plan=plan,
             )
         self.results["history"] = history
         return state, history

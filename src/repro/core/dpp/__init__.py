@@ -4,6 +4,7 @@ from repro.core.dpp.schedule import (
     sched_bfc,
     sched_dfc,
     sched_wave,
+    sched_zb_split,
     schedule_table,
 )
 from repro.core.dpp.planner import PlanResult, Planner
@@ -13,6 +14,7 @@ __all__ = [
     "sched_dfc",
     "sched_bfc",
     "sched_wave",
+    "sched_zb_split",
     "legalize",
     "schedule_table",
     "Planner",

@@ -10,19 +10,26 @@ paper's contribution — fully schedule-controlled.
 Interleaving layout: global block (c, s) = chunk c on stage s; value flow
 (c, s) -> (c, s+1), wrapping (c, S-1) -> (c+1, 0), so every transfer is the
 same +1 ring permute.
+
+``params`` may be any pytree whose leaves are stage-major stacked
+``[S, C, ...]`` arrays (a single array still works), and activations may have
+any trailing shape — this is what lets the *real* transformer train step run
+through the pipeline (``repro.models.pipeline`` builds the stacked block
+pytrees and the per-cell ``block_fn``; ``repro.train.train_step`` drives it).
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
-from typing import Callable
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.dpp.schedule import Step
+from repro.core.tracing.events import TraceEvent
 
 # jax moved shard_map out of experimental (and renamed check_rep -> check_vma)
 # around 0.5/0.6; support both so the executor runs on the pinned 0.4.x too.
@@ -123,29 +130,48 @@ def build_time_table(
     return TimeTable(run_m, run_c, run_act, recv_m, recv_c, recv_act, recv_fin, T)
 
 
+def bubble_fraction(table: TimeTable) -> float:
+    """Fraction of (step, stage) slots in the forward table that are idle.
+
+    The denominator includes the final flush step, so the number is directly
+    comparable across schedules for the same (S, C, n_micro) problem.
+    """
+    run_act = np.asarray(table.run_act)
+    T, S = run_act.shape
+    busy = int(run_act.sum())
+    return 1.0 - busy / float(T * S)
+
+
 def pipeline_apply(
-    params: jax.Array,                 # [S, C, ...] stage-major stacked blocks
-    x_micro: jax.Array,                # [n_micro, B, D] microbatch inputs
+    params: Any,                       # pytree of [S, C, ...] stacked blocks
+    x_micro: jax.Array,                # [n_micro, ...] microbatch inputs
     table: TimeTable,
     *,
     mesh: jax.sharding.Mesh,
     axis: str = "stage",
-    block_fn: Callable[[jax.Array, jax.Array], jax.Array],
+    block_fn: Callable[[Any, jax.Array], jax.Array],
 ) -> jax.Array:
-    """Runs the pipelined forward; returns [n_micro, B, D] final activations
-    (replicated).  Differentiable — backward pipelines automatically."""
+    """Runs the pipelined forward; returns [n_micro, ...] final activations
+    (replicated).  Differentiable — backward pipelines automatically.
+
+    ``params`` leaves are split over the ``axis`` mesh dimension (stage-major
+    leading axis); every other mesh axis sees them replicated.  ``block_fn``
+    receives one cell's params (leaves indexed down to ``[...]``, the chunk
+    axis consumed) and one microbatch activation of shape ``x_micro.shape[1:]``.
+    """
     S = mesh.shape[axis]
-    n_micro, B, D = x_micro.shape
-    C = params.shape[1]
+    n_micro = x_micro.shape[0]
+    rest = x_micro.shape[1:]
+    C = jax.tree.leaves(params)[0].shape[1]
 
     def body(params_loc, x_loc):
-        # params_loc [1, C, ...] (this stage's chunks); x_loc replicated
+        # params_loc leaves [1, C, ...] (this stage's chunks); x_loc replicated
         params_loc = jax.tree.map(lambda a: a[0], params_loc)
         sid = jax.lax.axis_index(axis)
 
-        inbox0 = jnp.zeros((n_micro, C, B, D), x_loc.dtype)
-        out0 = jnp.zeros((n_micro, B, D), x_loc.dtype)
-        recv0 = jnp.zeros((B, D), x_loc.dtype)
+        inbox0 = jnp.zeros((n_micro, C, *rest), x_loc.dtype)
+        out0 = jnp.zeros((n_micro, *rest), x_loc.dtype)
+        recv0 = jnp.zeros(rest, x_loc.dtype)
 
         def step(carry, t):
             inbox, out, recv = carry
@@ -191,7 +217,8 @@ def pipeline_apply(
 
 def reference_apply(params, x_micro, block_fn):
     """Sequential oracle: every block in (chunk, stage) order."""
-    S, C = params.shape[0], params.shape[1]
+    leaf = jax.tree.leaves(params)[0]
+    S, C = leaf.shape[0], leaf.shape[1]
 
     def one(x):
         for c in range(C):
@@ -200,3 +227,45 @@ def reference_apply(params, x_micro, block_fn):
         return x
 
     return jax.vmap(one)(x_micro)
+
+
+def emit_pipeline_events(
+    events: list[TraceEvent],
+    table: TimeTable,
+    *,
+    ts: float,
+    wall: float,
+    bwd_cost: float = 2.0,
+    step_idx: int = 0,
+) -> None:
+    """Synthesize per-(microbatch, stage, F/B) MegaScan events from the static
+    dispatch table, scaled into a measured step's [ts, ts+wall] window.
+
+    The forward traversal follows the table directly; the backward pipeline is
+    autodiff's exact mirror (the transposed scan replays ticks in reverse), so
+    its events are the reversed table stretched by ``bwd_cost``.  The chrome
+    export then shows the schedule's *actual* bubble structure — one pid row
+    per stage — without instrumenting the jitted scan body.
+    """
+    run_act = np.asarray(table.run_act)
+    run_m = np.asarray(table.run_m)
+    run_c = np.asarray(table.run_c)
+    T, S = run_act.shape
+    tick = max(wall, 1e-9) / (T * (1.0 + bwd_cost))
+    fwd_span = T * tick
+    for t in range(T):
+        for s in range(S):
+            if not run_act[t, s]:
+                continue
+            m, c = int(run_m[t, s]), int(run_c[t, s])
+            args = {"mb": m, "chunk": c, "stage": s, "step": step_idx}
+            events.append(TraceEvent(
+                "pp_F", s, ts + t * tick, tick, "compute",
+                {**args, "phase": "F"},
+            ))
+            events.append(TraceEvent(
+                "pp_B", s,
+                ts + fwd_span + (T - 1 - t) * bwd_cost * tick,
+                bwd_cost * tick, "compute",
+                {**args, "phase": "B"},
+            ))

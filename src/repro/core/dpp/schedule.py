@@ -115,6 +115,7 @@ __all__ = [
     "sched_bfc",
     "sched_1f1b",
     "sched_wave",
+    "sched_zb_split",
     "legalize",
     "schedule_table",
 ]

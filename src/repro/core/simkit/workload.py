@@ -114,6 +114,12 @@ def sched_bfc(n_micro: int, n_chunks: int) -> list[Step]:
 
 SCHEDULES = {"1f1b": sched_1f1b, "dfc": sched_dfc, "bfc": sched_bfc}
 
+#: Every named traversal ``make_order`` accepts — the simkit schedule
+#: comparison surface (benchmarks sweep this list).  "zb" is the ZB-inspired
+#: B/W split from ``core.dpp.schedule.sched_zb_split``; it is stage-dependent
+#: like 1f1b.
+SCHEDULE_NAMES = ("1f1b", "dfc", "bfc", "zb")
+
 
 def make_order(
     schedule: str | list[Step],
@@ -126,6 +132,15 @@ def make_order(
         return schedule
     if schedule == "1f1b":
         return sched_1f1b(n_micro, n_chunks, pp, stage)
+    if schedule == "zb":
+        # local import: dpp.schedule imports this module's primitives
+        from repro.core.dpp.schedule import sched_zb_split
+
+        return sched_zb_split(n_micro, n_chunks, pp, stage)
+    if schedule not in SCHEDULES:
+        raise ValueError(
+            f"unknown schedule {schedule!r}; one of {SCHEDULE_NAMES}"
+        )
     return SCHEDULES[schedule](n_micro, n_chunks)
 
 
@@ -148,10 +163,6 @@ def build_training_step(
     def stage_steps(p: int) -> list[Step]:
         if isinstance(schedule, dict):
             return schedule[p]
-        if schedule == "zb":
-            from repro.core.dpp.schedule import sched_zb_split
-
-            return sched_zb_split(n_micro, prof.n_chunks, topo.pp, p)
         return make_order(schedule, n_micro, prof.n_chunks, topo.pp, p)
 
     # ZB-style schedules split backward into B (activation grad, on the

@@ -7,6 +7,7 @@ importing this module never touches jax device state.
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
@@ -25,4 +26,32 @@ def make_host_mesh(data: int = 4, model: int = 2) -> jax.sharding.Mesh:
     n = len(jax.devices())
     data = min(data, n)
     model = max(1, min(model, n // data))
+    if (data, model) == (2, 4):
+        # fail loudly instead of letting jaxlib take the whole process down
+        raise ValueError(
+            "host mesh shape data=2 x model=4 is known to segfault this "
+            "jaxlib's CPU backend while compiling SPMD programs; use the "
+            "transposed make_host_mesh(data=4, model=2) (the default) instead"
+        )
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_pipeline_mesh(pp: int, dp: int = 1, tp: int = 1) -> jax.sharding.Mesh:
+    """(stage, data, model) mesh for pipeline-parallel training.
+
+    Uses the first ``pp*dp*tp`` local devices, so a pp=2 smoke run works on
+    the 8-device forced-host CPU fleet without consuming all of it.  The
+    ``stage`` axis feeds ``core.dpp.executor.pipeline_apply``; ``data`` /
+    ``model`` keep their usual logical-axis rule meanings outside the
+    pipelined section.
+    """
+    need = pp * dp * tp
+    devs = jax.devices()
+    if len(devs) < need:
+        raise ValueError(
+            f"pipeline mesh stage={pp} x data={dp} x model={tp} needs "
+            f"{need} devices, have {len(devs)} (for CPU smoke set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need})"
+        )
+    arr = np.asarray(devs[:need]).reshape(pp, dp, tp)
+    return jax.sharding.Mesh(arr, ("stage", "data", "model"))

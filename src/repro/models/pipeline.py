@@ -1,0 +1,214 @@
+"""Stage-stackable block application for MegaDPP pipeline parallelism.
+
+Bridges the model layer and ``repro.core.dpp.executor``: the LM families
+stack their repeating blocks into one scanned ``[layers, ...]`` segment
+(``lm.segment_layout``); pipeline parallelism instead needs those same
+weights laid out ``[stages, chunks_per_stage, groups_per_cell, ...]`` so each
+pipeline stage holds only its slice and the executor can index cell ``(s, c)``
+statically.  Three pieces live here:
+
+* :func:`pipeline_layout` — validates a config is pipeline-stackable and
+  derives the (pp, n_chunks, groups-per-cell) split of its layer stack;
+* :func:`restack_params` — the differentiable ``[G, ...] ->
+  [S, C, G/(S*C), ...]`` pytree transform (chunk-major, matching the
+  executor's (c, s) traversal: global group ``(c*S + s)*gpc + j``);
+* :func:`make_block_fn` / :func:`pipeline_loss` — the per-cell apply (real
+  transformer blocks via ``lm._block_apply``) and the full pipelined loss
+  (embed -> pipeline_apply -> final norm -> chunked cross-entropy), which
+  ``repro.train.train_step`` differentiates; the backward pipeline falls out
+  of autodiff through the executor's ``ppermute``.
+
+Restrictions (raise ``ValueError`` up front): families whose layer stack is a
+single uniform segment only (MoE's aux losses cannot ride the activation
+wire yet; mrope archs need per-block position ids the pipelined apply does
+not thread).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.dpp.executor import TimeTable, pipeline_apply
+from repro.models import layers as L
+from repro.models import lm
+from repro.models.hooks import NULL_COLLECTOR
+from repro.parallel.sharding import axis_rules
+
+
+@dataclass(frozen=True)
+class PipelineLayout:
+    """How one family's stacked layer segment splits across the pipeline."""
+
+    seg_key: str               # params key of the (single) stacked segment
+    kinds: tuple[str, ...]     # block kinds inside one scanned group
+    n_groups: int              # stacked groups in the segment
+    pp: int                    # pipeline stages
+    n_chunks: int              # virtual chunks per stage (interleaving)
+    groups_per_cell: int       # consecutive groups one (stage, chunk) holds
+
+
+def pipeline_layout(cfg: ModelConfig, pp: int, n_chunks: int = 1) -> PipelineLayout:
+    """Derive (and validate) the stage/chunk split of ``cfg``'s layer stack."""
+    if cfg.family == "moe":
+        raise ValueError(
+            "pipeline parallelism does not support MoE yet: router aux "
+            "losses cannot ride the pipeline's activation wire"
+        )
+    if cfg.input_kind == "embeds_mrope":
+        raise ValueError(
+            "pipeline parallelism does not support mrope archs: per-block "
+            "mrope position ids are not threaded through the pipelined apply"
+        )
+    segs = lm.segment_layout(cfg)
+    if len(segs) != 1:
+        raise ValueError(
+            f"{cfg.name}: pipeline parallelism needs a single uniform layer "
+            f"segment, got {len(segs)} (layout {segs})"
+        )
+    kinds, n_groups = segs[0]
+    cells = pp * n_chunks
+    if n_groups % cells != 0:
+        raise ValueError(
+            f"{cfg.name}: {n_groups} layer group(s) not divisible by "
+            f"pp*n_chunks = {pp}*{n_chunks} = {cells}"
+        )
+    return PipelineLayout("seg0", tuple(kinds), n_groups, pp, n_chunks,
+                          n_groups // cells)
+
+
+def restack_params(seg_params: Any, layout: PipelineLayout) -> Any:
+    """``[G, ...]`` leaves -> ``[S, C, G/(S*C), ...]``, chunk-major.
+
+    Execution order is (c=0, s=0..S-1), (c=1, s=0..S-1), ...: cell (s, c)
+    holds global groups ``(c*S + s)*gpc + j``.  Pure reshape/transpose, so
+    gradients flow back to the canonical stacked layout automatically.
+    """
+    S, C, g = layout.pp, layout.n_chunks, layout.groups_per_cell
+
+    def one(a):
+        a = a.reshape(C, S, g, *a.shape[1:])
+        return jnp.swapaxes(a, 0, 1)
+
+    return jax.tree.map(one, seg_params)
+
+
+def make_block_fn(
+    cfg: ModelConfig,
+    layout: PipelineLayout,
+) -> Callable[[Any, jax.Array], jax.Array]:
+    """Per-cell apply: runs the cell's ``groups_per_cell`` stacked groups of
+    real transformer blocks over one microbatch activation ``[B, S_seq, D]``.
+
+    Runs inside ``shard_map`` (per-device code), so the model's logical
+    sharding constraints must be inert — callers wrap the pipelined section
+    in ``axis_rules(None)`` (``pipeline_loss`` does).  MegaScope collectors
+    are not threaded into pipelined blocks: captures cannot ride the
+    activation wire, so probes observe only the embed/head ends.
+    """
+
+    def apply_group(gp: dict, x: jax.Array) -> jax.Array:
+        positions = jnp.arange(x.shape[1])
+        for j, kind in enumerate(layout.kinds):
+            x, _, aux = lm._block_apply(
+                gp[f"b{j}"], cfg, kind, x,
+                positions=positions, cache=None, cache_pos=None,
+                mrope_position_ids=None, paged=None,
+                collector=NULL_COLLECTOR,
+            )
+            if aux:
+                raise ValueError(
+                    f"block kind {kind!r} produced aux outputs; "
+                    "not supported on the pipeline path"
+                )
+        return x
+
+    group = apply_group
+    if cfg.remat != "none":
+        policy = (
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            if cfg.remat == "dots"
+            else jax.checkpoint_policies.nothing_saveable
+        )
+        group = jax.checkpoint(apply_group, policy=policy, prevent_cse=False)
+
+    def block_fn(cell_params: Any, x: jax.Array) -> jax.Array:
+        if layout.groups_per_cell == 1:
+            return group(jax.tree.map(lambda a: a[0], cell_params), x)
+
+        def body(xc, gp):
+            return group(gp, xc), None
+
+        x, _ = jax.lax.scan(body, x, cell_params)
+        return x
+
+    return block_fn
+
+
+def pipeline_forward(
+    cfg: ModelConfig,
+    params: dict,
+    x_micro: jax.Array,           # [n_micro, mb, S_seq, D] embedded inputs
+    *,
+    layout: PipelineLayout,
+    table: TimeTable,
+    mesh: jax.sharding.Mesh,
+    block_fn: Callable | None = None,
+) -> jax.Array:
+    """Pipelined block stack on real weights: returns [n_micro, mb, S, D]."""
+    block_fn = block_fn or make_block_fn(cfg, layout)
+    stacked = restack_params(params[layout.seg_key], layout)
+    return pipeline_apply(stacked, x_micro, table, mesh=mesh, block_fn=block_fn)
+
+
+def pipeline_loss(
+    cfg: ModelConfig,
+    params: dict,
+    batch: dict,
+    *,
+    layout: PipelineLayout,
+    table: TimeTable,
+    mesh: jax.sharding.Mesh,
+    n_micro: int,
+    block_fn: Callable | None = None,
+) -> tuple[jax.Array, dict]:
+    """Full pipelined training loss; same contract as ``lm.loss_fn``.
+
+    Embedding and the norm/cross-entropy head run replicated outside the
+    pipeline (they are cheap at repro scale); the block stack — where the
+    FLOPs live — runs through the schedule-controlled executor.  The global
+    batch splits into ``n_micro`` equal microbatches along the batch axis;
+    with equal per-microbatch token counts the global-mean cross-entropy here
+    equals the reference step's mean of per-microbatch means.
+    """
+    block_fn = block_fn or make_block_fn(cfg, layout)
+    # the pipeline body is per-device code under shard_map: logical-axis
+    # sharding constraints must resolve to no-ops while it traces
+    with axis_rules(None):
+        x = lm._embed_inputs(cfg, params, batch, jnp.dtype(cfg.compute_dtype))
+        B, S, D = x.shape
+        if B % n_micro != 0:
+            raise ValueError(
+                f"global batch {B} not divisible by n_micro={n_micro}"
+            )
+        mb = B // n_micro
+        x_micro = x.reshape(n_micro, mb, S, D)
+        hidden = pipeline_forward(
+            cfg, params, x_micro,
+            layout=layout, table=table, mesh=mesh, block_fn=block_fn,
+        )
+        hidden = hidden.reshape(B, S, D)
+        hidden = L.norm_apply(
+            params["final_norm"], hidden, cfg.norm_kind, cfg.norm_eps
+        )
+        total, count = L.chunked_xent(
+            params, cfg, hidden, batch["targets"], batch.get("loss_mask")
+        )
+        ce = total / jnp.maximum(count, 1.0)
+        metrics = {"loss": ce, "ce": ce,
+                   "aux_loss": jnp.zeros((), jnp.float32)}
+        return ce, metrics

@@ -1,3 +1,10 @@
+from repro.parallel.plan import (
+    PP_SCHEDULES,
+    ParallelPlan,
+    forward_order,
+    plan_summary,
+    resolve_plan,
+)
 from repro.parallel.sharding import (
     AxisRules,
     DEFAULT_RULES,
@@ -10,6 +17,11 @@ from repro.parallel.sharding import (
 )
 
 __all__ = [
+    "PP_SCHEDULES",
+    "ParallelPlan",
+    "forward_order",
+    "plan_summary",
+    "resolve_plan",
     "AxisRules",
     "DEFAULT_RULES",
     "axis_rules",

@@ -1,0 +1,130 @@
+"""ParallelPlan: the dp/tp/pp + schedule description threaded through the app.
+
+One frozen dataclass describes how a training run parallelizes:
+
+* ``dp`` / ``tp`` — the data / tensor degrees the logical-axis sharding rules
+  resolve against (``parallel.sharding``);
+* ``pp`` / ``n_micro`` / ``n_chunks`` / ``schedule`` / ``wave`` — the MegaDPP
+  pipeline axis: how many stages, how the (microbatch, chunk) task matrix is
+  traversed (``core.dpp.schedule``), and the wave width when the traversal is
+  wave-parametrized.  ``wave=0`` with ``schedule="wave"`` delegates the choice
+  to MegaDPP's resource-aware planner (best-effort BFC under the memory cap);
+* ``fbd_backward`` — attach MegaFBD's decoupled backward: gradients come from
+  an explicit forward-instance / backward-instance vjp split instead of one
+  fused ``value_and_grad`` (``core.fbd.decouple`` is the standalone
+  two-placement realization; the train step hosts the in-step attach).
+
+``repro.app.Session`` builds a plan from the ``parallel`` config section and
+hands it to ``train.loop.train`` -> ``train.train_step.make_train_step``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+from repro.core.dpp.schedule import (
+    Step,
+    sched_1f1b,
+    sched_bfc,
+    sched_dfc,
+    sched_wave,
+)
+
+PP_SCHEDULES = ("1f1b", "dfc", "bfc", "wave")
+
+
+@dataclass(frozen=True)
+class ParallelPlan:
+    dp: int = 1
+    tp: int = 1
+    pp: int = 1
+    n_micro: int = 0           # 0 = resolve_plan picks (2*pp when pp>1)
+    n_chunks: int = 1
+    schedule: str = "1f1b"     # one of PP_SCHEDULES
+    wave: int = 0              # 0 + schedule="wave" = planner chooses
+    fbd_backward: bool = False
+
+    @property
+    def world(self) -> int:
+        return self.dp * self.tp * self.pp
+
+    def validate(self) -> "ParallelPlan":
+        if min(self.dp, self.tp, self.pp) < 1:
+            raise ValueError(f"parallel degrees must be >= 1, got {self}")
+        if self.schedule not in PP_SCHEDULES:
+            raise ValueError(
+                f"unknown pipeline schedule {self.schedule!r}; "
+                f"one of {PP_SCHEDULES}"
+            )
+        if self.pp > 1 and self.n_micro < 0:
+            raise ValueError(f"n_micro must be >= 0, got {self.n_micro}")
+        if self.pp > 1 and (self.dp > 1 or self.tp > 1):
+            # honest failure beats silent replication: the pipelined loss
+            # runs under axis_rules(None) with only the stage axis
+            # partitioned, so dp/tp degrees would burn devices computing
+            # identical replicas while reporting themselves as parallelism
+            raise ValueError(
+                f"dp={self.dp}/tp={self.tp} with pp={self.pp} is not "
+                "supported yet: the pipelined step would replicate compute "
+                "over the data/model axes (no speedup); use dp=tp=1 with "
+                "pp>1, or pp=1 for the sharded DP/TP path"
+            )
+        return self
+
+
+def resolve_plan(
+    plan: ParallelPlan,
+    *,
+    memory_cap_gib: float = 8.0,
+    prof=None,
+) -> ParallelPlan:
+    """Fill derived fields: default microbatch count, planner-chosen wave.
+
+    The wave choice *is* MegaDPP's planner (``core.dpp.planner.Planner``):
+    candidate waves are simulated on the simkit engine and the fastest one
+    fitting the activation-memory cap wins — "adopt BFC as long as it does
+    not OOM".
+    """
+    plan.validate()
+    if plan.pp <= 1:
+        return plan
+    if plan.n_micro == 0:
+        plan = replace(plan, n_micro=2 * plan.pp)
+    if plan.schedule == "wave" and plan.wave == 0:
+        from repro.core.dpp.planner import Planner
+        from repro.core.simkit.workload import ModelProfile, Topology
+
+        planner = Planner(
+            Topology(dp=plan.dp, pp=plan.pp, tp=plan.tp),
+            prof or ModelProfile(n_chunks=plan.n_chunks),
+            n_micro=plan.n_micro,
+            memory_cap=int(memory_cap_gib * (1 << 30)),
+        )
+        plan = replace(plan, wave=planner.plan().wave)
+    return plan
+
+
+def forward_order(plan: ParallelPlan) -> list[Step]:
+    """The desired (microbatch, chunk) visit order the executor's time table
+    legalizes.  Only the F steps matter to the forward table; the backward
+    traversal is autodiff's mirror."""
+    nm, c = plan.n_micro, plan.n_chunks
+    if plan.schedule == "dfc":
+        return sched_dfc(nm, c)
+    if plan.schedule == "bfc":
+        return sched_bfc(nm, c)
+    if plan.schedule == "wave":
+        return sched_wave(nm, c, plan.wave or max(1, nm // 2))
+    if plan.schedule == "1f1b":
+        return sched_1f1b(nm, c, plan.pp, 0)
+    raise ValueError(f"unknown pipeline schedule {plan.schedule!r}")
+
+
+def plan_summary(plan: ParallelPlan) -> dict:
+    """JSON-able view for ``session.results`` / bench output."""
+    return {
+        "dp": plan.dp, "tp": plan.tp, "pp": plan.pp,
+        "n_micro": plan.n_micro, "n_chunks": plan.n_chunks,
+        "schedule": plan.schedule, "wave": plan.wave,
+        "fbd_backward": plan.fbd_backward,
+    }

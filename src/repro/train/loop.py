@@ -62,6 +62,7 @@ def train(
     tracer: Tracer | None = None,
     state=None,
     hooks: StepHooks | None = None,
+    plan=None,
 ) -> tuple[Any, list[dict]]:
     # tracing defaults ON, matching MegaServe — the repo-wide documented
     # default (observability is always-on; pass a disabled Tracer to opt out)
@@ -71,10 +72,22 @@ def train(
         with tracer.scope("init", op="init"):
             state = init_train_state(cfg, jax.random.PRNGKey(loop.seed))
 
-    step_fn = jax.jit(
-        make_train_step(cfg, ocfg, grad_accum=loop.grad_accum, collector=collector),
-        donate_argnums=0,
+    raw_step = make_train_step(
+        cfg, ocfg, grad_accum=loop.grad_accum, collector=collector, plan=plan
     )
+    # pp>1 steps carry their static dispatch table; MegaScan folds it into
+    # per-(microbatch, stage, F/B) events after each measured step
+    pp_info = getattr(raw_step, "pipeline", None)
+    # when compute dtype == param dtype the bf16 cast is a no-op and
+    # state.params aliases state.master — donating the state would hand XLA
+    # the same buffer twice (Execute() rejects it; under SPMD the surviving
+    # devices then hang at the next collective).  Donation is a pure memory
+    # optimization, so drop it for same-dtype (fp32 smoke) configs.
+    donate = (
+        (0,) if np.dtype(cfg.compute_dtype) != np.dtype(cfg.param_dtype)
+        else ()
+    )
+    step_fn = jax.jit(raw_step, donate_argnums=donate)
     if hooks is not None and hooks.wrap_step is not None:
         step_fn = hooks.wrap_step(step_fn)
 
@@ -95,6 +108,14 @@ def train(
         n_ev = len(tracer.events)
         with tracer.scope("train_step", op="train_step", mb=step):
             state, metrics = step_fn(state, batch)
+        if pp_info is not None and tracer.enabled:
+            from repro.core.dpp.executor import emit_pipeline_events
+
+            anchor = tracer.events[-1]  # the train_step scope just closed
+            emit_pipeline_events(
+                tracer.events, pp_info.table,
+                ts=anchor.ts, wall=anchor.dur, step_idx=step,
+            )
         if hooks is not None and hooks.on_step is not None:
             hooks.on_step(tracer.events[n_ev:], metrics)
         if (step + 1) % loop.log_every == 0 or step == loop.n_steps - 1:

@@ -1,6 +1,17 @@
 """Train-step factory: mixed precision (bf16 compute params + fp32 master &
 moments), optional gradient accumulation, optional gradient compression,
 fully sharded (ZeRO) state.
+
+With a :class:`repro.parallel.plan.ParallelPlan` whose ``pp > 1`` the step
+routes the transformer block stack through MegaDPP's schedule-controlled
+pipeline executor (``core.dpp.executor``) instead of the fused forward:
+microbatched grad-accum *is* the pipeline traversal, and the backward
+pipeline falls out of autodiff through ``ppermute``.  ``plan.fbd_backward``
+additionally attaches MegaFBD's decoupled backward (explicit vjp split —
+forward instance produces residuals, a separately-invokable pure transpose
+consumes them).  At ``pp == 1`` a plan degrades to plain gradient
+accumulation over ``plan.n_micro`` microbatches — bit-for-bit the existing
+step.
 """
 
 from __future__ import annotations
@@ -14,7 +25,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import get_model
 from repro.models.hooks import Collector, NULL_COLLECTOR
-from repro.parallel.sharding import shard_act
+from repro.parallel.sharding import current_mesh_and_rules, shard_act
 from repro.train.optim import OptimizerConfig, adamw_update, init_opt_state
 
 
@@ -59,6 +70,16 @@ def train_state_axes(cfg: ModelConfig) -> TrainState:
     )
 
 
+@dataclass(frozen=True)
+class PipelineStepInfo:
+    """Static pipeline context attached to a pp>1 step callable (``.pipeline``)
+    so the train loop can emit MegaScan bubble-structure events per step."""
+
+    plan: Any            # ParallelPlan
+    table: Any           # core.dpp.executor.TimeTable
+    layout: Any          # models.pipeline.PipelineLayout
+
+
 def make_train_step(
     cfg: ModelConfig,
     ocfg: OptimizerConfig,
@@ -66,8 +87,29 @@ def make_train_step(
     grad_accum: int = 1,
     grad_transform: Callable[[Any], Any] | None = None,
     collector: Collector = NULL_COLLECTOR,
+    plan=None,
+    mesh=None,
 ) -> Callable:
-    """Returns step(state, batch) -> (state, metrics); pure and jittable."""
+    """Returns step(state, batch) -> (state, metrics); pure and jittable.
+
+    ``plan`` (a ``ParallelPlan``) selects the pipeline-parallel path when its
+    ``pp > 1`` — ``mesh`` then must carry a ``"stage"`` axis of size ``pp``
+    (default: the mesh installed via ``parallel.sharding.axis_rules``).  A
+    ``pp == 1`` plan is plain gradient accumulation over ``plan.n_micro``.
+    """
+    if plan is not None and plan.pp > 1:
+        if grad_accum > 1:
+            raise ValueError(
+                f"grad_accum={grad_accum} with pp={plan.pp}: microbatched "
+                "grad-accum *is* the pipeline traversal — set "
+                "parallel.n_micro instead"
+            )
+        return _make_pipeline_train_step(
+            cfg, ocfg, plan, mesh=mesh,
+            grad_transform=grad_transform, collector=collector,
+        )
+    if plan is not None:
+        grad_accum = max(grad_accum, plan.n_micro)
     model = get_model(cfg)
 
     def loss_of(params, batch):
@@ -121,4 +163,91 @@ def make_train_step(
         new_state = TrainState(params=params, master=master, opt=opt)
         return new_state, {**metrics, **stats}
 
+    return step
+
+
+def _make_pipeline_train_step(
+    cfg: ModelConfig,
+    ocfg: OptimizerConfig,
+    plan,
+    *,
+    mesh=None,
+    grad_transform: Callable[[Any], Any] | None = None,
+    collector: Collector = NULL_COLLECTOR,
+) -> Callable:
+    """The pp>1 train step: block stack through the MegaDPP pipeline executor.
+
+    Params stay in their canonical stacked layout — the differentiable
+    restack to ``[stage, chunk, ...]`` happens inside the loss — so the
+    optimizer update, checkpoint format, and sharding constraints are
+    unchanged from the fused path.
+    """
+    from repro.core.dpp.executor import build_time_table
+    from repro.models import pipeline as pl
+    from repro.parallel.plan import forward_order
+
+    if mesh is None:
+        mesh = current_mesh_and_rules()[0]
+    if mesh is None or mesh.shape.get("stage") != plan.pp:
+        raise ValueError(
+            f"pipeline train step (pp={plan.pp}) needs a mesh with a 'stage' "
+            f"axis of size {plan.pp}; got "
+            f"{dict(mesh.shape) if mesh is not None else None} — build one "
+            "with repro.launch.mesh.make_pipeline_mesh(pp, dp, tp)"
+        )
+    layout = pl.pipeline_layout(cfg, plan.pp, plan.n_chunks)
+    table = build_time_table(
+        forward_order(plan), plan.pp, plan.n_chunks, plan.n_micro
+    )
+    block_fn = pl.make_block_fn(cfg, layout)
+    model = get_model(cfg)
+    param_axes = model.param_axes(cfg)
+    if collector is not NULL_COLLECTOR:
+        import logging
+
+        logging.getLogger("repro.train").warning(
+            "MegaScope probes do not observe pipelined blocks (pp=%d): "
+            "captures cannot ride the pipeline's activation wire", plan.pp
+        )
+
+    def loss_of(params, batch):
+        return pl.pipeline_loss(
+            cfg, params, batch,
+            layout=layout, table=table, mesh=mesh,
+            n_micro=plan.n_micro, block_fn=block_fn,
+        )
+
+    if plan.fbd_backward:
+        def compute_grads(params, batch):
+            # MegaFBD attach: the forward instance records residuals; the
+            # transpose is hoisted into a pure, separately-invokable function
+            # (closure_convert), its residual arguments being exactly the
+            # F->B transfer MegaFBD's coordinator manages.
+            loss, vjp, metrics = jax.vjp(
+                lambda p: loss_of(p, batch), params, has_aux=True
+            )
+            vjp_pure, residuals = jax.closure_convert(
+                vjp, jnp.ones_like(loss)
+            )
+            (grads,) = vjp_pure(jnp.ones_like(loss), *residuals)
+            return loss, metrics, grads
+    else:
+        grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+        def compute_grads(params, batch):
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+
+    def step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        loss, metrics, grads = compute_grads(state.params, batch)
+        grads = shard_like_params(param_axes, grads)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        master, opt, stats = adamw_update(ocfg, grads, state.master, state.opt)
+        params = jax.tree.map(lambda x: x.astype(cfg.compute_dtype), master)
+        new_state = TrainState(params=params, master=master, opt=opt)
+        return new_state, {**metrics, **stats}
+
+    step.pipeline = PipelineStepInfo(plan=plan, table=table, layout=layout)
     return step

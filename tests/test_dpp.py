@@ -169,6 +169,40 @@ def test_executor_gradients_match_reference():
                                rtol=1e-4, atol=1e-5)
 
 
+def test_zb_split_step_counts():
+    """sched_zb_split emits exactly one F, one B and one deferred W per
+    (microbatch, chunk), for every stage's wedge depth."""
+    from repro.core.dpp.schedule import sched_zb_split
+
+    n_micro, n_chunks, pp = 6, 2, 4
+    for stage in range(pp):
+        steps = sched_zb_split(n_micro, n_chunks, pp, stage)
+        by_kind = {}
+        for kind, m, c in steps:
+            by_kind.setdefault(kind, []).append((m, c))
+        cells = [(m, c) for m in range(n_micro) for c in range(n_chunks)]
+        for kind in ("F", "B", "W"):
+            assert sorted(by_kind[kind]) == cells, (stage, kind)
+        # W work only ever follows its own B
+        seen_b = set()
+        for kind, m, c in steps:
+            if kind == "B":
+                seen_b.add((m, c))
+            elif kind == "W":
+                assert (m, c) in seen_b
+
+
+def test_make_order_dispatches_zb():
+    """'zb' is a first-class named schedule in the simkit comparison."""
+    from repro.core.dpp.schedule import sched_zb_split
+    from repro.core.simkit.workload import SCHEDULE_NAMES, make_order
+
+    assert "zb" in SCHEDULE_NAMES
+    assert make_order("zb", 4, 2, 4, 1) == sched_zb_split(4, 2, 4, 1)
+    with pytest.raises(ValueError, match="unknown schedule"):
+        make_order("nope", 4, 2, 4, 0)
+
+
 def test_zb_split_schedule_reduces_makespan():
     """ZB-inspired B/W split (paper §2.3.2 anchor): deferring weight-grad
     work off the critical path shortens the pipeline drain."""
