@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test ci cli-smoke bench-serve bench-pp docs-check deps deps-dev
+.PHONY: test ci cli-smoke bench-serve bench-pp bench-obs docs-check deps deps-dev
 
 # tier-1 verification
 test:
@@ -18,7 +18,7 @@ cli-smoke:
 	python -m repro serve --arch qwen2-0.5b --smoke --continuous \
 		--requests 8 --max-new 8 --rate 500
 
-ci: test docs-check cli-smoke bench-pp
+ci: test docs-check cli-smoke bench-pp bench-obs
 
 # decode-latency-vs-max_len sweep (paged vs gathered) + continuous-vs-static;
 # persists the perf trajectory to BENCH_serve.json
@@ -29,6 +29,11 @@ bench-serve:
 # asserts pipelined-vs-reference loss parity and persists BENCH_pp.json
 bench-pp:
 	python benchmarks/pp_bench.py --out BENCH_pp.json
+
+# observability overhead gate: full metrics + online-detection stack vs a
+# bare train loop; asserts < 5% median step overhead, persists BENCH_obs.json
+bench-obs:
+	python benchmarks/obs_bench.py --out BENCH_obs.json
 
 deps:
 	pip install -r requirements.txt

@@ -5,8 +5,8 @@
     python -m repro trace  --out artifacts/megascan
     python -m repro dryrun --arch qwen3-14b --shape train_4k
 
-Shared surface (every subcommand): ``--modules scan,scope,dpp,fbd`` toggles
-the four MegatronApp module plugins (``none`` disables all), ``--set a.b=v``
+Shared surface (every subcommand): ``--modules scan,metrics,scope,dpp,fbd``
+toggles the module plugins (``none`` disables all), ``--set a.b=v``
 applies dotted typed overrides onto the :class:`repro.app.config.RunConfig`,
 ``--config run.json`` layers a JSON file underneath them, and
 ``--trace-out`` exports the run's MegaScan events as a chrome trace —
@@ -37,11 +37,20 @@ _SHARED = [
     ("--seed", "seed", dict(type=int)),
     ("--modules", "modules", dict(
         type=str, metavar="M1,M2",
-        help="module plugins to attach (scan,scope,fbd,dpp; 'none' = off)")),
+        help="module plugins to attach (scan,metrics,scope,fbd,dpp; "
+             "'none' = off)")),
     ("--mesh", "mesh", dict(
         choices=("auto", "auto-mp", "host", "pod1", "pod2"))),
     ("--trace-out", "trace_out", dict(
-        type=str, help="export this run's TraceEvents as a chrome trace")),
+        type=str, help="export this run's TraceEvents as a chrome trace "
+                       "(a .jsonl path streams instead; non-.jsonl paths "
+                       "also stream a .jsonl sidecar while running)")),
+    ("--metrics-out", "obs.metrics_out", dict(
+        type=str, help="stream the metrics registry as JSONL time series")),
+    ("--detect-online", "scan.detect_online", dict(
+        action="store_true",
+        help="run MegaScan's straggler detector over a sliding window of "
+             "TraceEvents during the run (see --set scan.* thresholds)")),
 ]
 
 _TRAIN = [
@@ -82,6 +91,10 @@ _SERVE = [
 
 _TRACE = [
     ("--load", "trace.load", dict(type=str, help="analyse a JSONL trace")),
+    ("--detect", "trace.detect", dict(
+        type=str, metavar="TRACE",
+        help="load a saved trace (chrome .json or streamed .jsonl), run "
+             "align + detect, print the diagnosis summary")),
     ("--out", "trace.out", dict(type=str)),
     ("--slow-rank", "trace.slow_rank", dict(type=int)),
     ("--slow-factor", "trace.slow_factor", dict(type=float)),
@@ -243,8 +256,8 @@ def run(argv: list[str]) -> dict:
                   f"{'CORRECT' if t['detected'] else 'MISMATCH'} "
                   f"(truth={t['slow_ranks']})")
     _print_results({k: v for k, v in session.results.items()
-                    if k in ("scan", "scope", "fbd", "dpp", "parallel",
-                             "trace_out")})
+                    if k in ("scan", "metrics", "scope", "fbd", "dpp",
+                             "parallel", "trace_out")})
     return session.results
 
 

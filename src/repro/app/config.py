@@ -96,6 +96,21 @@ class ScanSection:
     # the cost of serializing async dispatch; off by default so the default
     # CLI path keeps the launcher's original pipelined throughput
     sync: bool = False
+    # --- online detection (OnlineDetector hook; --detect-online) ----------
+    detect_online: bool = False
+    detect_every: int = 8          # detection pass every N workload steps
+    detect_window: int = 64        # sliding window, in steps of TraceEvents
+    # re-align window clocks before each pass: required when events carry
+    # real per-rank clocks (gathered multi-host traces), a pure cost on a
+    # single-tracer session whose events already share one monotonic clock
+    detect_align: bool = False
+    # --- detect() thresholds, shared by the online hook and the offline
+    # trace workload (--set scan.slow_ratio=... etc.)
+    slow_ratio: float = 1.25       # stage 1: dur > ratio * DP-peer median
+    candidate_frac: float = 0.25   # stage 1: slow-op fraction -> candidate
+    skew_margin: float = 0.05      # stage 2: last-start gap vs span
+    late_frac: float = 0.4         # stage 2: late-start fraction -> confirm
+    degrade_ratio: float = 1.6     # stage 3: bw < global median / ratio
 
 
 @dataclass
@@ -133,10 +148,38 @@ class DppSection:
 
 
 @dataclass
+class ObsSection:
+    """Live telemetry (the ``metrics`` plugin + per-rank event synthesis).
+
+    ``metrics_out`` streams flat JSONL samples every ``every`` steps;
+    ``prom_out`` writes a Prometheus text-format snapshot at finalize.
+    ``peak_tflops`` > 0 turns the measured model-flops/s series into an MFU
+    estimate.  ``rank_events`` synthesizes per-DP-rank fwd/bwd/all-reduce
+    events (topology ``dp``/``pp``/``tp``) into the trace each step — what
+    the online detector analyses on a single-host run — and ``slow_rank``
+    >= 0 additionally *induces* a live straggler at ``slow_factor`` speed
+    (simkit's ``compute_slowdown`` applied to the real loop).
+    """
+
+    metrics_out: str = ""          # JSONL time-series path ("" = off)
+    prom_out: str = ""             # Prometheus text snapshot path ("" = off)
+    every: int = 1                 # sample/export cadence, in steps
+    peak_tflops: float = 0.0       # hardware peak for MFU (0 = no estimate)
+    rank_events: bool = False      # synthesize per-rank events each step
+    dp: int = 2                    # synthesized topology
+    pp: int = 1
+    tp: int = 1
+    slow_rank: int = -1            # induce a straggler on this rank (< 0 off)
+    slow_factor: float = 0.5       # its relative speed (0.5 = half)
+
+
+@dataclass
 class TraceSection:
     """Offline MegaScan workload: simulate (or load) -> align -> detect."""
 
     load: str = ""                 # JSONL trace to analyse ("" = simulate)
+    detect: str = ""               # trace file (chrome JSON or JSONL) to
+                                   # align + detect + summarize (--detect)
     dp: int = 2
     pp: int = 2
     tp: int = 2
@@ -176,6 +219,7 @@ class RunConfig:
     train: TrainSection = field(default_factory=TrainSection)
     serve: ServeSection = field(default_factory=ServeSection)
     scan: ScanSection = field(default_factory=ScanSection)
+    obs: ObsSection = field(default_factory=ObsSection)
     scope: ScopeSection = field(default_factory=ScopeSection)
     fbd: FbdSection = field(default_factory=FbdSection)
     dpp: DppSection = field(default_factory=DppSection)
@@ -199,11 +243,13 @@ class RunConfig:
 
 
 #: Layer 2: per-workload defaults applied over the dataclass defaults.
-#: Tracing is *on by default for every workload* — the repo's documented
-#: unification of the old split (train silently off, serve on).
+#: Tracing *and* live metrics are on by default for every live workload —
+#: the repo's documented unification of the old split (train silently off,
+#: serve on), extended by the observability PR: the ``metrics`` plugin owns
+#: the session MetricsRegistry the instrumented loops publish into.
 WORKLOAD_DEFAULTS: dict[str, dict[str, object]] = {
-    "train": {"modules": ("scan",)},
-    "serve": {"modules": ("scan",)},
+    "train": {"modules": ("scan", "metrics")},
+    "serve": {"modules": ("scan", "metrics")},
     "trace": {"modules": ()},      # the workload *is* MegaScan, offline
     "dryrun": {"modules": ()},     # compile analysis: nothing to attach to
 }

@@ -79,6 +79,17 @@ class ScanPlugin(ModulePlugin):
     callable is wrapped with ``jax.block_until_ready`` so scope durations
     are faithful — the CPU analogue of the paper's CUDA-event bracketing —
     at the cost of serializing async dispatch (off by default).
+
+    Two online extensions ride the same plugin:
+
+    * ``--detect-online`` runs an :class:`repro.obs.OnlineDetector` over the
+      step event stream (topology from the ``obs`` section); verdict deltas
+      are stamped into the trace as ``diagnosis`` instant events and the
+      last diagnosis lands in the ``scan.online`` report;
+    * a ``--trace-out`` path additionally streams every event through an
+      ``AsyncTraceWriter`` to a ``.jsonl`` sidecar as the run progresses,
+      so a mid-run crash leaves a usable trace (a ``.jsonl`` trace_out IS
+      the stream — Session then skips the end-of-run chrome export).
     """
 
     name = "scan"
@@ -86,8 +97,36 @@ class ScanPlugin(ModulePlugin):
     def setup(self, session) -> None:
         from repro.core.tracing.tracer import Tracer
 
-        self._scan_cfg = self.run_cfg.scan
-        session.tracer = Tracer(rank=self._scan_cfg.rank, enabled=True)
+        sc = self._scan_cfg = self.run_cfg.scan
+        session.tracer = Tracer(rank=sc.rank, enabled=True)
+        self._detector = None
+        self._first_detect: int | None = None
+        if sc.detect_online:
+            from repro.core.simkit.workload import Topology
+            from repro.obs import OnlineDetector
+
+            o = self.run_cfg.obs
+            self._detector = OnlineDetector(
+                Topology(dp=o.dp, pp=o.pp, tp=o.tp),
+                every=sc.detect_every, window=sc.detect_window,
+                align=sc.detect_align,
+                thresholds=dict(
+                    slow_ratio=sc.slow_ratio,
+                    candidate_frac=sc.candidate_frac,
+                    skew_margin=sc.skew_margin,
+                    late_frac=sc.late_frac,
+                    degrade_ratio=sc.degrade_ratio,
+                ),
+            )
+        self._writer = None
+        self._streamed = 0
+        if self.run_cfg.trace_out:
+            from pathlib import Path
+
+            from repro.core.tracing.tracer import AsyncTraceWriter
+
+            self._stream_path = Path(self.run_cfg.trace_out).with_suffix(".jsonl")
+            self._writer = AsyncTraceWriter(self._stream_path, mode="w")
 
     def wrap_step(self, step_fn):
         if not self._scan_cfg.sync:
@@ -101,14 +140,127 @@ class ScanPlugin(ModulePlugin):
 
         return synced
 
+    def on_step(self, session, events, metrics) -> None:
+        if self._detector is not None and events:
+            update = self._detector.push(events)
+            if update is not None:
+                if update.diagnosis.slow_ranks and self._first_detect is None:
+                    self._first_detect = update.step
+                if update.changed:
+                    session.tracer.instant(
+                        "diagnosis",
+                        slow_ranks=list(update.diagnosis.slow_ranks),
+                        new=update.new_slow_ranks,
+                        cleared=update.cleared_slow_ranks,
+                        degraded_links=[
+                            list(l) for l in update.new_degraded_links
+                        ],
+                    )
+        if self._writer is not None:
+            evs = session.tracer.events
+            self._writer.submit(evs[self._streamed:])
+            self._streamed = len(evs)
+
     def finalize(self, session) -> dict:
         by_name: dict[str, float] = {}
         for e in session.tracer.events:
             by_name[e.name] = by_name.get(e.name, 0.0) + e.dur
-        return {
+        out = {
             "events": len(session.tracer.events),
             "dur_s_by_name": {k: round(v, 4) for k, v in sorted(by_name.items())},
         }
+        if self._writer is not None:
+            evs = session.tracer.events
+            self._writer.submit(evs[self._streamed:])
+            self._streamed = len(evs)
+            self._writer.close()
+            out["stream"] = str(self._stream_path)
+        if self._detector is not None:
+            last = self._detector.history[-1] if self._detector.history else {}
+            out["online"] = {
+                "passes": len(self._detector.history),
+                "first_detect_step": self._first_detect,
+                "slow_ranks": last.get("slow_ranks", []),
+                "degraded_links": last.get("degraded_links", []),
+            }
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Live metrics — the MetricsRegistry + exporters behind every workload
+# ---------------------------------------------------------------------------
+
+
+@register_plugin
+class MetricsPlugin(ModulePlugin):
+    """Owns the session :class:`repro.obs.MetricsRegistry`.
+
+    The instrumented loops (``train.loop``, ``serve.server``) publish their
+    standard series into ``session.metrics_registry``; this plugin samples
+    the registry every ``obs.every`` steps — appending a flat JSONL row to
+    ``--metrics-out`` and chrome counter events to the session trace (they
+    render as counter tracks next to the spans in the shared
+    ``--trace-out``) — and at finalize writes the ``obs.prom_out``
+    Prometheus snapshot and reports the flattened series (plus an MFU
+    estimate when ``obs.peak_tflops`` is set).
+    """
+
+    name = "metrics"
+
+    def setup(self, session) -> None:
+        from repro.obs import JsonlExporter, MetricsRegistry
+
+        self._obs = self.run_cfg.obs
+        self.registry = MetricsRegistry()
+        session.metrics_registry = self.registry
+        self._jsonl = (
+            JsonlExporter(self._obs.metrics_out)
+            if self._obs.metrics_out else None
+        )
+        self._n = 0
+
+    def on_step(self, session, events, metrics) -> None:
+        self._n += 1
+        if self._n % max(self._obs.every, 1):
+            return
+        if not len(self.registry):
+            return  # nothing published yet (e.g. an idle serve tick)
+        from repro.obs import counter_events, flatten_snapshot
+
+        # flatten once; counter_events accepts the already-flat view
+        flat = flatten_snapshot(self.registry.snapshot())
+        ts = session.tracer.clock()
+        if self._jsonl is not None:
+            self._jsonl.write({"step": self._n, "ts": ts, **flat})
+        if session.tracer.enabled:
+            session.tracer.events.extend(counter_events(flat, ts=ts))
+
+    def finalize(self, session) -> dict:
+        from repro.obs import flatten_snapshot, prometheus_text
+
+        snap = self.registry.snapshot()
+        out: dict = {
+            "series": {
+                k: round(v, 6) for k, v in flatten_snapshot(snap).items()
+            },
+        }
+        if self._jsonl is not None:
+            self._jsonl.close()
+            out["metrics_out"] = str(self._jsonl.path)
+            out["rows"] = self._jsonl.rows
+        if self._obs.prom_out:
+            from pathlib import Path
+
+            p = Path(self._obs.prom_out)
+            p.parent.mkdir(parents=True, exist_ok=True)
+            p.write_text(prometheus_text(self.registry))
+            out["prom_out"] = str(p)
+        flops_s = snap.get("train.model_flops_per_s")
+        if self._obs.peak_tflops > 0 and isinstance(flops_s, dict):
+            out["mfu_est"] = round(
+                flops_s["p50"] / (self._obs.peak_tflops * 1e12), 6
+            )
+        return out
 
 
 # ---------------------------------------------------------------------------

@@ -95,9 +95,11 @@ class Session:
 
             self.model_cfg = get_config(run_cfg.arch, smoke=run_cfg.smoke)
         # plugin-claimable resources, with inert defaults: no scan plugin ->
-        # disabled tracer, no scope plugin -> null collector
+        # disabled tracer, no scope plugin -> null collector, no metrics
+        # plugin -> no registry (instrumented loops skip publication)
         self.tracer = Tracer(rank=0, enabled=False)
         self.collector = NULL_COLLECTOR
+        self.metrics_registry = None
         self.results: dict[str, Any] = {}
         self.plugins = (
             plugins if plugins is not None
@@ -138,8 +140,6 @@ class Session:
         for p in self.plugins:
             self.results[p.name] = p.finalize(self)
         if self.run_cfg.trace_out:
-            from repro.core.tracing.chrome import save_chrome
-
             # an explicit --trace-out always writes, even when the run
             # traced nothing (e.g. --modules none) — an empty trace file
             # is debuggable, a silently missing one is not
@@ -147,7 +147,20 @@ class Session:
                 log.warning(
                     "trace_out=%s: no TraceEvents were recorded (is the "
                     "'scan' module enabled?)", self.run_cfg.trace_out)
-            save_chrome(self.tracer.events, self.run_cfg.trace_out)
+            out_path = Path(self.run_cfg.trace_out)
+            streamed = self.results.get("scan", {}).get("stream", "")
+            if out_path.suffix == ".jsonl":
+                # a .jsonl trace_out asks for the streaming format itself;
+                # the scan plugin already wrote it incrementally — only
+                # dump at the end when no plugin streamed (--modules none)
+                if str(out_path) != streamed:
+                    with open(out_path, "w") as f:
+                        for e in self.tracer.events:
+                            f.write(json.dumps(e.to_json()) + "\n")
+            else:
+                from repro.core.tracing.chrome import save_chrome
+
+                save_chrome(self.tracer.events, self.run_cfg.trace_out)
             self.results["trace_out"] = self.run_cfg.trace_out
             log.info("trace -> %s", self.run_cfg.trace_out)
         return self.results
@@ -167,6 +180,19 @@ class Session:
             self.finalize()
 
     # -------------------------------------------------------------- train
+    def _rank_event_spec(self):
+        """Resolve the ``obs`` section into a per-rank event synthesis spec
+        (``None`` unless rank events or straggler induction are asked for)."""
+        o = self.run_cfg.obs
+        if not (o.rank_events or o.slow_rank >= 0):
+            return None
+        from repro.obs import RankEventSpec
+
+        return RankEventSpec(
+            dp=o.dp, pp=o.pp, tp=o.tp,
+            slow_rank=o.slow_rank, slow_factor=o.slow_factor,
+        )
+
     def _train_derived(self):
         """Resolve the 0-means-auto training fields against smoke/full."""
         rc, t = self.run_cfg, self.run_cfg.train
@@ -248,6 +274,7 @@ class Session:
                 cfg, ocfg, data, loop,
                 collector=self.collector, tracer=self.tracer,
                 hooks=self.step_hooks(), plan=plan,
+                registry=self.metrics_registry, obs=self._rank_event_spec(),
             )
         self.results["history"] = history
         return state, history
@@ -392,6 +419,11 @@ class Session:
             "prefill_tok_s": B * P / max(t_prefill, 1e-9),
             "decode_tok_s": B * (s.max_new - 1) / max(t_decode, 1e-9),
         }
+        if self.metrics_registry is not None:
+            reg = self.metrics_registry
+            reg.histogram("serve.prefill_s").observe(t_prefill)
+            reg.counter("serve.tokens").inc(B * s.max_new)
+            reg.gauge("serve.decode_tok_s").set(metrics["decode_tok_s"])
         self.results["serve_metrics"] = metrics
         return gen, metrics
 
@@ -414,12 +446,15 @@ class Session:
             simulate_trace,
         )
         from repro.core.tracing.chrome import save_chrome
-        from repro.core.tracing.tracer import load_jsonl
+        from repro.core.tracing.tracer import load_jsonl, load_trace
 
         t = self.run_cfg.trace
         topo = Topology(dp=t.dp, pp=t.pp, tp=t.tp)
         truth = None
-        if t.load:
+        if t.detect:
+            # offline triage of a saved run: chrome JSON or streamed JSONL
+            events = load_trace(t.detect)
+        elif t.load:
             events = load_jsonl(t.load)
         else:
             faults = FaultModel(
@@ -430,8 +465,14 @@ class Session:
                 topo, ModelProfile(), n_micro=t.n_micro, n_iters=t.n_iters,
                 faults=faults, clocks=ClockModel(seed=self.run_cfg.seed),
             )
+        sc = self.run_cfg.scan
         aligned = apply_alignment(events, align_clocks(events))
-        diag = detect(aligned, topo)
+        diag = detect(
+            aligned, topo,
+            slow_ratio=sc.slow_ratio, candidate_frac=sc.candidate_frac,
+            skew_margin=sc.skew_margin, late_frac=sc.late_frac,
+            degrade_ratio=sc.degrade_ratio,
+        )
         self.results["diagnosis"] = diag.summary()
         if truth is not None:
             self.results["truth"] = {

@@ -1,5 +1,11 @@
 from repro.core.tracing.events import TraceEvent
-from repro.core.tracing.tracer import AsyncTraceWriter, Tracer, gather_traces
+from repro.core.tracing.tracer import (
+    AsyncTraceWriter,
+    Tracer,
+    gather_traces,
+    load_jsonl,
+    load_trace,
+)
 from repro.core.tracing.chrome import from_chrome, to_chrome
 from repro.core.tracing.align import (
     CollectiveInstance,
@@ -15,6 +21,8 @@ __all__ = [
     "Tracer",
     "AsyncTraceWriter",
     "gather_traces",
+    "load_jsonl",
+    "load_trace",
     "to_chrome",
     "from_chrome",
     "CollectiveInstance",

@@ -18,6 +18,19 @@ def to_chrome(events: Iterable[TraceEvent]) -> dict:
     ranks = set()
     for e in events:
         ranks.add(e.rank)
+        if e.kind == "counter":
+            # metric samples (repro.obs.export.counter_events) render as
+            # counter tracks in Perfetto, alongside the span threads
+            out.append({
+                "name": e.name,
+                "ph": "C",
+                "pid": e.rank,
+                "ts": e.ts * 1e6,
+                "cat": e.kind,
+                "args": {k: (list(v) if isinstance(v, tuple) else v)
+                         for k, v in e.args.items()},
+            })
+            continue
         out.append({
             "name": e.name,
             "ph": "X" if e.dur > 0 else "i",
@@ -47,6 +60,12 @@ def from_chrome(doc: dict) -> list[TraceEvent]:
     tid_rev = {v: k for k, v in _TID.items()}
     out = []
     for e in doc.get("traceEvents", []):
+        if e.get("ph") == "C":
+            out.append(TraceEvent(
+                e["name"], e["pid"], e["ts"] / 1e6, 0.0, "counter",
+                dict(e.get("args", {})),
+            ))
+            continue
         if e.get("ph") not in ("X", "i"):
             continue
         args = dict(e.get("args", {}))

@@ -20,8 +20,7 @@ from __future__ import annotations
 
 from collections import defaultdict
 from dataclasses import dataclass, field
-
-import numpy as np
+from statistics import median
 
 from repro.core.simkit.workload import Topology
 from repro.core.tracing.align import CollectiveInstance, reconstruct_collectives
@@ -63,7 +62,9 @@ def _stage1_peer_comparison(
     for key, per_rank in groups.items():
         if len(per_rank) < 2:
             continue
-        med = float(np.median(list(per_rank.values())))
+        # statistics.median: the groups are tiny (one value per DP peer),
+        # where numpy's per-call overhead dominates the online pass
+        med = float(median(per_rank.values()))
         for r, dur in per_rank.items():
             total_count[r] += 1
             if dur > slow_ratio * med:
@@ -110,10 +111,10 @@ def _stage3_p2p_bandwidth(
             continue
         per_edge[(e.rank, peer)].append(nbytes / e.dur)
 
-    bw = {edge: float(np.median(v)) for edge, v in per_edge.items() if v}
+    bw = {edge: float(median(v)) for edge, v in per_edge.items() if v}
     if not bw:
         return {}, []
-    global_med = float(np.median(list(bw.values())))
+    global_med = float(median(bw.values()))
     degraded = [e for e, b in bw.items() if b < global_med / degrade_ratio]
     return bw, degraded
 

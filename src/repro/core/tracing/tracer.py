@@ -68,21 +68,51 @@ def gather_traces(tracers: Iterable[Tracer]) -> list[TraceEvent]:
 
 
 class AsyncTraceWriter:
-    """Background JSONL persistence (keeps the training path stall-free)."""
+    """Background JSONL persistence (keeps the training path stall-free).
 
-    def __init__(self, path: str | Path):
+    Streaming semantics: rows are flushed every ``flush_every`` writes and
+    whenever the queue goes idle for ``idle_s``, so a mid-run crash leaves
+    every completed step's events readable on disk (``load_jsonl``) instead
+    of losing the whole end-of-run export.  ``mode="w"`` truncates at open —
+    the per-run streaming default; ``"a"`` appends across runs.
+    """
+
+    def __init__(
+        self,
+        path: str | Path,
+        *,
+        mode: str = "a",
+        flush_every: int = 64,
+        idle_s: float = 0.2,
+    ):
         self.path = Path(path)
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        self._mode = mode
+        self._flush_every = max(flush_every, 1)
+        self._idle_s = idle_s
         self._q: queue.Queue = queue.Queue()
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
 
     def _run(self) -> None:
-        with open(self.path, "a") as f:
+        with open(self.path, self._mode) as f:
+            pending = 0
             while True:
-                item = self._q.get()
+                try:
+                    item = self._q.get(timeout=self._idle_s)
+                except queue.Empty:
+                    if pending:
+                        f.flush()
+                        pending = 0
+                    continue
                 if item is None:
+                    f.flush()
                     break
                 f.write(json.dumps(item.to_json()) + "\n")
+                pending += 1
+                if pending >= self._flush_every:
+                    f.flush()
+                    pending = 0
 
     def submit(self, events: Iterable[TraceEvent]) -> None:
         for e in events:
@@ -100,3 +130,29 @@ def load_jsonl(path: str | Path) -> list[TraceEvent]:
             if line.strip():
                 out.append(TraceEvent.from_json(json.loads(line)))
     return out
+
+
+def load_trace(path: str | Path) -> list[TraceEvent]:
+    """Load a saved trace whatever its format: a chrome-trace JSON document
+    (object with ``traceEvents``, or a bare event array) or the streamed
+    JSONL that ``AsyncTraceWriter`` produces.  A whole-file parse
+    discriminates the formats (JSONL rows are also objects, so sniffing the
+    first character would misfire), so ``trace --detect`` accepts either
+    the ``--trace-out`` export or its ``.jsonl`` streaming sidecar."""
+    text = Path(path).read_text()
+    try:
+        # a chrome trace is ONE JSON value spanning the file (a JSONL file
+        # with 2+ rows fails here: trailing data after the first object)
+        doc = json.loads(text)
+    except json.JSONDecodeError:
+        return [
+            TraceEvent.from_json(json.loads(line))
+            for line in text.splitlines() if line.strip()
+        ]
+    if isinstance(doc, list):
+        doc = {"traceEvents": doc}
+    if "traceEvents" in doc:
+        from repro.core.tracing.chrome import from_chrome
+
+        return from_chrome(doc)
+    return [TraceEvent.from_json(doc)]  # single-row JSONL

@@ -1,0 +1,48 @@
+"""Live telemetry (the observability layer MegaScan feeds at runtime).
+
+The paper's MegaScan is post-hoc: gather traces, align clocks, run the
+3-stage detector.  Production trainers (MegaScale, TorchTitan) argue the
+same analysis must run *during* the run — fast failover needs the diagnosis
+before the job dies.  This package is that online layer:
+
+* :mod:`repro.obs.metrics` — a :class:`MetricsRegistry` of counters, gauges
+  and histograms with streaming P50/P95/P99 quantiles (the P² algorithm, so
+  a million step times cost five floats, not a list);
+* :mod:`repro.obs.detector` — :class:`OnlineDetector`, MegaScan's
+  ``reconstruct_collectives`` + ``detect()`` over a sliding window of recent
+  ``TraceEvent``s, emitting ``Diagnosis`` deltas while the workload runs;
+* :mod:`repro.obs.export` — JSONL time series, Prometheus text format, and
+  chrome ``counter`` events that merge into the shared ``--trace-out`` so
+  metric tracks render in Perfetto alongside the spans;
+* :mod:`repro.obs.inject` — per-rank event synthesis (and optional induced
+  straggler) so a single-host run exercises the online detector end to end.
+
+Wired into every workload through the ``metrics`` module plugin and the
+``scan`` plugin's ``--detect-online`` hook (see ``repro.app.plugins``).
+"""
+
+from repro.obs.detector import DetectionUpdate, OnlineDetector
+from repro.obs.export import (
+    JsonlExporter,
+    counter_events,
+    flatten_snapshot,
+    prometheus_text,
+)
+from repro.obs.inject import RankEventSpec, emit_rank_events
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry, P2Quantile
+
+__all__ = [
+    "Counter",
+    "DetectionUpdate",
+    "Gauge",
+    "Histogram",
+    "JsonlExporter",
+    "MetricsRegistry",
+    "OnlineDetector",
+    "P2Quantile",
+    "RankEventSpec",
+    "counter_events",
+    "emit_rank_events",
+    "flatten_snapshot",
+    "prometheus_text",
+]

@@ -98,10 +98,15 @@ class MegaServe:
         drafter: Drafter | None = None,
         use_jit: bool = True,
         wrap_step: Callable[[Callable], Callable] | None = None,
+        registry=None,
     ):
         self.cfg = cfg
         self.serve_cfg = serve_cfg
         self.params = params
+        # live telemetry (a repro.obs.MetricsRegistry, or None): TTFT and
+        # decode/prefill latency histograms, queue-depth / KV-occupancy
+        # gauges, preemption + spec-acceptance counters publish per tick
+        self.registry = registry
         # decorator applied to every jitted engine step (prefill / decode /
         # spec-verify) — the ModulePlugin.wrap_step attach point
         self._wrap = wrap_step if wrap_step is not None else (lambda f: f)
@@ -229,6 +234,7 @@ class MegaServe:
         plugins are enabled) become this server's, and every jitted engine
         step runs through the plugins' ``wrap_step`` chain — so serving
         emits through the same observability spine as every workload."""
+        kw.setdefault("registry", getattr(session, "metrics_registry", None))
         return cls(
             session.model_cfg, params, serve_cfg,
             collector=session.collector, tracer=session.tracer,
@@ -309,6 +315,7 @@ class MegaServe:
                 toks += [0] * (n_blk * self.serve_cfg.block_size - n_real)
                 phys += [0] * (n_blk - len(phys))
             tokens = jnp.asarray(toks, jnp.int32)[None, :]
+            t_pre = self._clock()
             with self.tracer.scope(
                 "prefill", kind="compute", rid=adm.rid, slot=adm.slot,
                 tokens=n_real, recompute=adm.is_recompute,
@@ -322,6 +329,12 @@ class MegaServe:
             now = self._clock()
             self._emit(adm.slot, int(tok), caps, slot_axis=False)
             self.sched.record_token(adm.slot, int(tok), now)
+            if self.registry is not None:
+                self.registry.histogram("serve.prefill_s").observe(now - t_pre)
+                if not adm.is_recompute:  # recomputes kept their first TTFT
+                    ttft = self.sched.requests[adm.rid].ttft
+                    if ttft is not None:
+                        self.registry.histogram("serve.ttft_s").observe(ttft)
             admitted.append(adm.rid)
             tokens_out += 1
 
@@ -350,6 +363,10 @@ class MegaServe:
         finished += self.sched.evict_finished(now)
         if admitted or active:
             self.step_idx += 1  # idle ticks don't count as engine steps
+        # preempted alone still publishes: ensure_capacity can evict every
+        # slot (pool too tight for even one), and that count must not vanish
+        if self.registry is not None and (admitted or active or preempted):
+            self._publish_tick(active, preempted, tokens_out)
         return {
             "admitted": admitted,
             "preempted": preempted,
@@ -357,6 +374,21 @@ class MegaServe:
             "active": len(active),
             "tokens": tokens_out,
         }
+
+    def _publish_tick(
+        self, active: list[int], preempted: list[int], tokens_out: int
+    ) -> None:
+        """Per-tick serve series into the registry (host bookkeeping only)."""
+        reg, alloc = self.registry, self.sched.allocator
+        reg.counter("serve.tokens").inc(tokens_out)
+        if preempted:
+            reg.counter("serve.preemptions").inc(len(preempted))
+        reg.gauge("serve.queue_depth").set(len(self.sched.waiting))
+        reg.gauge("serve.active_slots").set(len(active))
+        used = alloc.num_blocks - alloc.reserved - alloc.num_free
+        reg.gauge("serve.kv_occupancy").set(
+            used / max(self.serve_cfg.usable_blocks, 1)
+        )
 
     def _live_tables(self, active: list[int]) -> jax.Array:
         """Block tables for the decode/verify step.  On the paged path they
@@ -375,6 +407,7 @@ class MegaServe:
         toks = jnp.asarray(self.sched.last_tok, jnp.int32)
         pos = jnp.asarray(self.sched.pos, jnp.int32)
         tables = self._live_tables(active)
+        t_dec = self._clock()
         with self.tracer.scope(
             "decode", kind="compute", step=self.step_idx,
             active=len(active), tokens=len(active),
@@ -384,6 +417,8 @@ class MegaServe:
             )
             next_tok = jax.block_until_ready(next_tok)
         now = self._clock()
+        if self.registry is not None:
+            self.registry.histogram("serve.decode_step_s").observe(now - t_dec)
         next_tok = np.asarray(next_tok)
         for s in active:
             self.sched.advance(s)
@@ -512,6 +547,17 @@ class MegaServe:
             "accept", t0, self._clock() - t0, kind="host",
             step=self.step_idx, accepted=accepted_total, emitted=emitted_total,
         )
+        if self.registry is not None:
+            reg = self.registry
+            reg.histogram("serve.verify_step_s").observe(v_dur)
+            drafted = sum(len(d) for d in drafts.values())
+            if drafted:
+                reg.counter("serve.spec_proposed").inc(drafted)
+                reg.counter("serve.spec_accepted").inc(accepted_total)
+                reg.gauge("serve.spec_accept_rate").set(
+                    reg.counter("serve.spec_accepted").value
+                    / reg.counter("serve.spec_proposed").value
+                )
         return emitted_total
 
     def _emit(self, slot: int, tok: int, caps: Any, *, slot_axis: bool) -> None:

@@ -52,6 +52,62 @@ class StepHooks:
     on_step: Callable[[list, dict], None] | None = None
 
 
+def _step_flops(jit_step, state, batch) -> float:
+    """Model flops of one jitted step via XLA's cost analysis (the MFU
+    numerator).  ``Lowered.cost_analysis`` needs no compile; fall back to
+    the compiled executable's analysis, and to 0.0 (series disabled) on
+    backends exposing neither."""
+    try:
+        lowered = jit_step.lower(state, batch)
+        try:
+            cost = lowered.cost_analysis()
+        except Exception:
+            cost = lowered.compile().cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        return float(cost.get("flops", 0.0) or 0.0)
+    except Exception:
+        return 0.0
+
+
+_MEM_STATS_SUPPORTED: bool | None = None  # probed once; CPU returns None
+
+
+def _device_mem_bytes() -> float | None:
+    """Live device memory (None on backends without allocator stats)."""
+    global _MEM_STATS_SUPPORTED
+    if _MEM_STATS_SUPPORTED is False:
+        return None
+    try:
+        stats = jax.local_devices()[0].memory_stats()
+        if stats and "bytes_in_use" in stats:
+            _MEM_STATS_SUPPORTED = True
+            return float(stats["bytes_in_use"])
+    except Exception:
+        pass
+    _MEM_STATS_SUPPORTED = False
+    return None
+
+
+def _publish_step_metrics(registry, metrics, *, step_s, tokens, flops):
+    """One step's standard series into the MetricsRegistry (host-side)."""
+    registry.counter("train.steps").inc()
+    registry.counter("train.tokens").inc(tokens)
+    registry.histogram("train.step_time_s").observe(step_s)
+    registry.gauge("train.tokens_per_s").set(tokens / max(step_s, 1e-9))
+    if flops:
+        registry.histogram("train.model_flops_per_s").observe(
+            flops / max(step_s, 1e-9)
+        )
+    for k in ("loss", "grad_norm", "lr"):
+        v = metrics.get(k)
+        if v is not None and getattr(v, "ndim", 0) == 0:
+            registry.gauge(f"train.{k}").set(float(v))
+    mem = _device_mem_bytes()
+    if mem is not None:
+        registry.gauge("train.device_mem_bytes").set(mem)
+
+
 def train(
     cfg: ModelConfig,
     ocfg: OptimizerConfig,
@@ -63,9 +119,14 @@ def train(
     state=None,
     hooks: StepHooks | None = None,
     plan=None,
+    registry=None,
+    obs=None,
 ) -> tuple[Any, list[dict]]:
     # tracing defaults ON, matching MegaServe — the repo-wide documented
     # default (observability is always-on; pass a disabled Tracer to opt out)
+    # ``registry`` (a repro.obs.MetricsRegistry) receives the standard train
+    # series each step; ``obs`` (a repro.obs.RankEventSpec) synthesizes
+    # per-rank events — and induces a live straggler when its slow_rank >= 0
     tracer = tracer or Tracer(rank=0, enabled=True)
     ds = SyntheticTokens(data_cfg)
     if state is None:
@@ -87,7 +148,8 @@ def train(
         (0,) if np.dtype(cfg.compute_dtype) != np.dtype(cfg.param_dtype)
         else ()
     )
-    step_fn = jax.jit(raw_step, donate_argnums=donate)
+    jit_step = jax.jit(raw_step, donate_argnums=donate)
+    step_fn = jit_step
     if hooks is not None and hooks.wrap_step is not None:
         step_fn = hooks.wrap_step(step_fn)
 
@@ -101,20 +163,54 @@ def train(
             start = last
             log.info("restored checkpoint at step %d", start)
 
+    # MFU numerator, once: the flops XLA attributes to one step (lowering
+    # uses the same in-memory jit, so the first real call still compiles
+    # exactly once).  Only probed when someone will read the series.
+    flops = (
+        _step_flops(jit_step, state, ds.batch_at(start))
+        if registry is not None else 0.0
+    )
+    tokens_per_step = data_cfg.global_batch * data_cfg.seq_len
+
     history: list[dict] = []
     t0 = time.perf_counter()
     for step in range(start, loop.n_steps):
         batch = ds.batch_at(step)
         n_ev = len(tracer.events)
+        t_step = time.perf_counter()
         with tracer.scope("train_step", op="train_step", mb=step):
             state, metrics = step_fn(state, batch)
-        if pp_info is not None and tracer.enabled:
+            extra = 0.0
+            if obs is not None and obs.slow_rank >= 0:
+                # induce the straggler INSIDE the scope: block until the
+                # real compute lands, then sleep the downclock excess —
+                # the step window genuinely stretches, like a slow rank's
+                jax.block_until_ready(metrics)
+                extra = obs.extra_seconds(time.perf_counter() - t_step)
+                if extra > 0:
+                    time.sleep(extra)
+        step_s = time.perf_counter() - t_step
+        anchor = tracer.events[-1] if tracer.enabled else None
+        if pp_info is not None and anchor is not None:
             from repro.core.dpp.executor import emit_pipeline_events
 
-            anchor = tracer.events[-1]  # the train_step scope just closed
+            # the train_step scope just closed; fold its wall into
+            # per-(microbatch, stage, F/B) pipeline events
             emit_pipeline_events(
                 tracer.events, pp_info.table,
                 ts=anchor.ts, wall=anchor.dur, step_idx=step,
+            )
+        if obs is not None and anchor is not None:
+            from repro.obs.inject import emit_rank_events
+
+            emit_rank_events(
+                tracer.events, obs,
+                ts=anchor.ts, wall=anchor.dur, extra=extra, step=step,
+            )
+        if registry is not None:
+            _publish_step_metrics(
+                registry, metrics,
+                step_s=step_s, tokens=tokens_per_step, flops=flops,
             )
         if hooks is not None and hooks.on_step is not None:
             hooks.on_step(tracer.events[n_ev:], metrics)

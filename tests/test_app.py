@@ -47,7 +47,7 @@ class TestRunConfig:
     def test_defaults_and_workload_layer(self):
         cfg = RunConfig.for_workload("train")
         assert cfg.workload == "train"
-        assert cfg.modules == ("scan",)      # tracing on by default
+        assert cfg.modules == ("scan", "metrics")  # observability on by default
         assert cfg.train.steps == 100
         cfg = RunConfig.for_workload("dryrun")
         assert cfg.modules == ()             # nothing to attach to

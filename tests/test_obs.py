@@ -1,0 +1,467 @@
+"""Observability subsystem: metrics registry + P² quantiles, exporters
+(JSONL / Prometheus / chrome counters), the streaming OnlineDetector, and
+the end-to-end live-straggler acceptance path through ``repro.app``."""
+
+import json
+import math
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.simkit.workload import Topology
+from repro.core.tracing import (
+    Tracer,
+    from_chrome,
+    load_jsonl,
+    load_trace,
+    to_chrome,
+)
+from repro.core.tracing.events import TraceEvent
+from repro.core.tracing.tracer import AsyncTraceWriter
+from repro.obs import (
+    Counter,
+    Gauge,
+    Histogram,
+    JsonlExporter,
+    MetricsRegistry,
+    OnlineDetector,
+    P2Quantile,
+    RankEventSpec,
+    counter_events,
+    emit_rank_events,
+    flatten_snapshot,
+    prometheus_text,
+)
+
+TINY_TRAIN = ["--arch", "qwen2-0.5b", "--smoke", "--steps", "2",
+              "--seq-len", "32", "--global-batch", "2"]
+
+
+# ------------------------------------------------------------- primitives ---
+
+
+class TestP2Quantile:
+    def test_exact_below_five_observations(self):
+        est = P2Quantile(0.5)
+        for x in (5.0, 1.0, 3.0):
+            est.observe(x)
+        assert est.value == 3.0  # exact median of {1, 3, 5}
+
+    @pytest.mark.parametrize("q", [0.5, 0.95, 0.99])
+    def test_tracks_numpy_quantile_on_lognormal(self, q):
+        rng = np.random.default_rng(0)
+        xs = rng.lognormal(0.0, 0.5, size=5000)
+        est = P2Quantile(q)
+        for x in xs:
+            est.observe(x)
+        truth = float(np.quantile(xs, q))
+        assert abs(est.value - truth) / truth < 0.05, (q, est.value, truth)
+
+    def test_rejects_degenerate_quantile(self):
+        with pytest.raises(ValueError):
+            P2Quantile(1.0)
+
+    def test_empty_is_nan(self):
+        assert math.isnan(P2Quantile(0.5).value)
+
+
+class TestRegistry:
+    def test_counter_monotonic(self):
+        c = Counter()
+        c.inc()
+        c.inc(9.0)
+        assert c.value == 10.0
+        with pytest.raises(ValueError):
+            c.inc(-1)
+
+    def test_gauge_last_write_wins(self):
+        g = Gauge()
+        g.set(3.0)
+        g.set(1.5)
+        assert g.value == 1.5
+
+    def test_histogram_stats(self):
+        h = Histogram()
+        for v in range(1, 101):
+            h.observe(float(v))
+        s = h.stats()
+        assert s["count"] == 100 and s["min"] == 1.0 and s["max"] == 100.0
+        assert s["mean"] == pytest.approx(50.5)
+        assert abs(s["p50"] - 50.5) < 3
+        assert s["p95"] > s["p50"]
+        assert Histogram().stats() == {"count": 0}
+
+    def test_get_or_create_and_type_guard(self):
+        reg = MetricsRegistry()
+        assert reg.counter("a") is reg.counter("a")
+        reg.histogram("h").observe(1.0)
+        with pytest.raises(TypeError):
+            reg.gauge("a")  # "a" is already a Counter
+        assert "a" in reg and len(reg) == 2
+        assert reg.kind_of("h") == "histogram"
+
+    def test_snapshot_sorted_and_flatten(self):
+        reg = MetricsRegistry()
+        reg.gauge("z").set(1.0)
+        reg.counter("a").inc()
+        reg.histogram("m").observe(2.0)
+        snap = reg.snapshot()
+        assert list(snap) == ["a", "m", "z"]
+        flat = flatten_snapshot(snap)
+        assert flat["a"] == 1.0 and flat["m.p50"] == 2.0 and flat["z"] == 1.0
+
+
+# -------------------------------------------------------------- exporters ---
+
+
+def _toy_registry():
+    reg = MetricsRegistry()
+    reg.counter("train.tokens").inc(512)
+    reg.gauge("train.tokens_per_s").set(100.0)
+    h = reg.histogram("train.step_time_s")
+    for v in (0.1, 0.2, 0.3, 0.4, 0.5, 0.6):
+        h.observe(v)
+    return reg
+
+
+def test_jsonl_exporter_crash_usable(tmp_path):
+    path = tmp_path / "metrics.jsonl"
+    exp = JsonlExporter(path)
+    exp.write({"step": 1, "loss": 2.0})
+    exp.write({"step": 2, "loss": 1.5})
+    # rows readable BEFORE close — flushed per write
+    rows = [json.loads(l) for l in path.read_text().splitlines()]
+    assert rows == [{"step": 1, "loss": 2.0}, {"step": 2, "loss": 1.5}]
+    exp.close()
+    assert exp.rows == 2
+
+
+def test_prometheus_text_format():
+    text = prometheus_text(_toy_registry())
+    assert "# TYPE repro_train_tokens counter" in text
+    assert "# TYPE repro_train_tokens_per_s gauge" in text
+    assert "# TYPE repro_train_step_time_s summary" in text
+    assert 'repro_train_step_time_s{quantile="0.5"}' in text
+    assert "repro_train_step_time_s_count 6" in text
+    assert "repro_train_tokens 512.0" in text
+
+
+def test_counter_events_skip_bookkeeping_stats():
+    evs = counter_events(_toy_registry().snapshot(), ts=1.5)
+    names = {e.name for e in evs}
+    # scalar series + histogram mean/quantiles; count/sum/min/max skipped
+    assert "train.tokens" in names and "train.step_time_s.p95" in names
+    assert not any(n.endswith((".count", ".sum", ".min", ".max")) for n in names)
+    assert all(e.kind == "counter" and e.ts == 1.5 for e in evs)
+
+
+def test_chrome_counter_roundtrip():
+    evs = [
+        TraceEvent("loss", 0, 1.0, 0.02, "compute", {"op": "fwd"}),
+        TraceEvent("train.loss", 0, 1.5, 0.0, "counter", {"value": 2.5}),
+    ]
+    doc = to_chrome(evs)
+    counters = [e for e in doc["traceEvents"] if e.get("ph") == "C"]
+    assert len(counters) == 1
+    assert counters[0]["name"] == "train.loss"
+    assert counters[0]["args"]["value"] == 2.5
+    assert "dur" not in counters[0] and "tid" not in counters[0]
+    back = from_chrome(doc)
+    assert len(back) == 2
+    c = next(e for e in back if e.kind == "counter")
+    assert c.name == "train.loss" and c.args["value"] == 2.5
+    assert abs(c.ts - 1.5) < 1e-9
+
+
+# ---------------------------------------------------------- async writer ---
+
+
+def test_async_writer_streams_mid_run(tmp_path):
+    path = tmp_path / "stream.jsonl"
+    w = AsyncTraceWriter(path, mode="w", flush_every=4, idle_s=0.02)
+    evs = [TraceEvent(f"e{i}", 0, float(i), 0.1, "compute", {}) for i in range(10)]
+    w.submit(evs)
+    # crash-usability: rows land on disk WITHOUT close (idle flush)
+    deadline = time.monotonic() + 5.0
+    while time.monotonic() < deadline:
+        if path.exists() and len(path.read_text().splitlines()) >= 10:
+            break
+        time.sleep(0.02)
+    assert len(load_jsonl(path)) == 10
+    w.close()
+    assert [e.name for e in load_jsonl(path)] == [f"e{i}" for i in range(10)]
+
+
+def test_load_trace_sniffs_both_formats(tmp_path):
+    evs = [TraceEvent("fwd", 0, 1.0, 0.5, "compute", {"op": "fwd"}),
+           TraceEvent("bwd", 1, 1.5, 0.5, "compute", {"op": "bwd"})]
+    chrome = tmp_path / "t.json"
+    chrome.write_text(json.dumps(to_chrome(evs)))
+    jsonl = tmp_path / "t.jsonl"
+    jsonl.write_text("".join(json.dumps(e.to_json()) + "\n" for e in evs))
+    for p in (chrome, jsonl):
+        back = load_trace(p)
+        assert [e.name for e in back] == ["fwd", "bwd"], p
+    # single-row JSONL is ambiguous with a chrome doc; still resolves
+    single = tmp_path / "one.jsonl"
+    single.write_text(json.dumps(evs[0].to_json()) + "\n")
+    assert load_trace(single)[0].name == "fwd"
+
+
+# -------------------------------------------------------- online detector ---
+
+
+def _healthy_stream(detector, spec, steps, wall=0.1):
+    updates = []
+    for step in range(steps):
+        evs = []
+        emit_rank_events(evs, spec, ts=step * wall, wall=wall, step=step)
+        u = detector.push(evs)
+        if u is not None:
+            updates.append(u)
+    return updates
+
+
+def test_online_detector_flags_slow_rank_streaming():
+    spec = RankEventSpec(dp=2, slow_rank=1, slow_factor=0.5)
+    det = OnlineDetector(spec.topology(), every=4, window=16)
+    wall, updates = 0.2, []
+    for step in range(8):
+        evs = []
+        # slow rank doubles the step: half of the wall is induced excess
+        emit_rank_events(evs, spec, ts=step * wall, wall=wall,
+                         extra=wall / 2, step=step)
+        u = det.push(evs)
+        if u is not None:
+            updates.append(u)
+    assert updates, "no detection pass ran"
+    first = updates[0]
+    assert first.diagnosis.slow_ranks == [1]
+    assert first.new_slow_ranks == [1] and first.changed
+    # verdict is steady after the first pass -> later deltas are empty
+    assert all(not u.changed for u in updates[1:])
+    assert det.history and det.history[-1]["slow_ranks"] == [1]
+
+
+def test_online_detector_healthy_run_no_false_positives():
+    spec = RankEventSpec(dp=2)
+    det = OnlineDetector(spec.topology(), every=4, window=16)
+    updates = _healthy_stream(det, spec, steps=12)
+    assert updates
+    assert all(u.diagnosis.slow_ranks == [] and not u.changed for u in updates)
+
+
+def test_online_detector_recovery_clears_rank():
+    slow = RankEventSpec(dp=2, slow_rank=1, slow_factor=0.5)
+    det = OnlineDetector(slow.topology(), every=4, window=4)
+    wall = 0.2
+    for step in range(4):
+        evs = []
+        emit_rank_events(evs, slow, ts=step * wall, wall=wall,
+                         extra=wall / 2, step=step)
+        det.push(evs)
+    assert det.history[-1]["slow_ranks"] == [1]
+    # rank recovers; window (4 steps) rolls over entirely to healthy ones
+    healthy = RankEventSpec(dp=2)
+    updates = _healthy_stream(det, healthy, steps=4, wall=wall)
+    assert updates[-1].cleared_slow_ranks == [1]
+    assert updates[-1].diagnosis.slow_ranks == []
+
+
+def test_online_detector_guards():
+    topo = Topology(dp=2, pp=1, tp=1)
+    with pytest.raises(ValueError):
+        OnlineDetector(topo, every=0)
+    det = OnlineDetector(topo, every=1, min_events=10_000)
+    assert det.push([TraceEvent("x", 0, 0.0, 1.0, "compute", {})]) is None
+
+
+# ------------------------------------- detect() branch coverage (offline) ---
+
+
+def _dp1_iter_events(ts, slow_rank=1, slow=0.6, fast=0.3):
+    """One iteration on a dp=1 tp=2 topology: stage 1 has per-key groups of
+    size 1 (no cross-DP peer), so only stage 2's start-skew can testify."""
+    evs = []
+    for r in (0, 1):
+        dur = slow if r == slow_rank else fast
+        evs.append(TraceEvent("fwd", r, ts, dur, "compute",
+                              {"op": "fwd", "mb": 0, "phase": "F"}))
+        evs.append(TraceEvent("allreduce", r, ts + dur, 1.0 - dur, "coll",
+                              {"op": "allreduce", "group": (0, 1), "mb": 0,
+                               "phase": "G"}))
+    return evs
+
+
+def test_detect_dp1_stage2_only_fallback():
+    from repro.core.tracing import detect
+
+    topo = Topology(dp=1, pp=1, tp=2)
+    events = []
+    for i in range(6):
+        events.extend(_dp1_iter_events(float(i)))
+    diag = detect(events, topo)
+    # stage 1 cannot vote (all peer groups are singletons)...
+    assert diag.candidate_ranks == []
+    # ...yet the consistently-late starter is still confirmed via stage 2
+    assert diag.slow_ranks == [1], diag.summary()
+
+
+def test_detect_stage3_degraded_link_dp1():
+    from repro.core.tracing import detect
+
+    topo = Topology(dp=1, pp=3, tp=1)
+    events, mb = [], 1 << 20
+    for i in range(8):
+        ts = float(i)
+        # edge (1, 2) moves the same megabyte 10x slower than (0, 1)
+        for (src, dst), dur in {(0, 1): 0.01, (1, 2): 0.1}.items():
+            events.append(TraceEvent(
+                f"send{src}{dst}", src, ts, dur, "p2p",
+                {"dir": "send", "peer": dst, "bytes": mb, "mb": i},
+            ))
+    diag = detect(events, topo)
+    assert (1, 2) in {tuple(l) for l in diag.degraded_links}, diag.summary()
+    assert diag.link_bandwidth[(1, 2)] < diag.link_bandwidth[(0, 1)]
+
+
+# ----------------------------------------------- app threading + CLI path ---
+
+
+class TestAppWiring:
+    def test_scan_thresholds_thread_through_set(self):
+        from repro.app.config import build_run_config
+
+        cfg = build_run_config("train", sets=[
+            "scan.detect_online=true", "scan.detect_every=2",
+            "scan.slow_ratio=2.0", "scan.late_frac=0.7",
+        ])
+        sc = cfg.scan
+        assert sc.detect_online and sc.detect_every == 2
+        assert sc.slow_ratio == 2.0 and sc.late_frac == 0.7
+        # obs section defaults + override
+        cfg = build_run_config("train", sets=["obs.slow_rank=1", "obs.dp=4"])
+        assert cfg.obs.slow_rank == 1 and cfg.obs.dp == 4
+        assert cfg.modules == ("scan", "metrics")
+
+    def test_metrics_plugin_reports_series(self):
+        from repro.app.cli import run
+
+        res = run(["train", *TINY_TRAIN])
+        series = res["metrics"]["series"]
+        assert series["train.steps"] == 2.0
+        assert series["train.step_time_s.count"] == 2
+        assert "train.loss" in series and "train.tokens_per_s" in series
+
+    def test_metrics_out_and_prom_out(self, tmp_path):
+        from repro.app.cli import run
+
+        mpath = tmp_path / "m.jsonl"
+        ppath = tmp_path / "prom.txt"
+        res = run(["train", *TINY_TRAIN, "--metrics-out", str(mpath),
+                   "--set", f"obs.prom_out={ppath}"])
+        rows = [json.loads(l) for l in mpath.read_text().splitlines()]
+        assert len(rows) == 2 and rows[-1]["step"] == 2
+        assert "train.loss" in rows[-1]
+        assert res["metrics"]["rows"] == 2
+        assert "# TYPE repro_train_step_time_s summary" in ppath.read_text()
+
+    def test_serve_metrics_series(self):
+        from repro.app.cli import run
+
+        res = run(["serve", "--arch", "qwen2-0.5b", "--smoke", "--continuous",
+                   "--requests", "3", "--max-new", "4"])
+        series = res["metrics"]["series"]
+        assert series["serve.ttft_s.count"] == 3
+        assert series["serve.tokens"] > 0
+        assert "serve.kv_occupancy" in series
+        assert "serve.queue_depth" in series
+
+    def test_trace_detect_cli_on_chrome_and_jsonl(self, tmp_path):
+        from repro.app.cli import run
+
+        spec = RankEventSpec(dp=2, slow_rank=1, slow_factor=0.5)
+        events = []
+        for step in range(6):
+            emit_rank_events(events, spec, ts=step * 0.2, wall=0.2,
+                             extra=0.1, step=step)
+        chrome = tmp_path / "t.json"
+        chrome.write_text(json.dumps(to_chrome(events)))
+        jsonl = tmp_path / "t.jsonl"
+        jsonl.write_text("".join(json.dumps(e.to_json()) + "\n"
+                                 for e in events))
+        for p in (chrome, jsonl):
+            res = run(["trace", "--detect", str(p),
+                       "--dp", "2", "--pp", "1", "--tp", "1"])
+            assert res["diagnosis"]["slow_ranks"] == [1], p
+
+
+# ------------------------------------------------ acceptance: live detect ---
+
+
+class TestLiveStragglerAcceptance:
+    """The ISSUE acceptance path: a host-mesh train run with an induced
+    straggler produces an OnlineDetector diagnosis naming that rank DURING
+    the run, metrics render as chrome counter tracks, and the streamed
+    sidecar supports offline re-detection."""
+
+    @pytest.fixture(scope="class")
+    def live_run(self, tmp_path_factory):
+        from repro.app.config import build_run_config
+        from repro.app.session import Session
+
+        out = tmp_path_factory.mktemp("obs") / "trace.json"
+        cfg = build_run_config(
+            "train",
+            sets=["obs.slow_rank=1", "obs.dp=2", "obs.slow_factor=0.5",
+                  "scan.detect_online=true", "scan.detect_every=4",
+                  "train.steps=12", "train.seq_len=32",
+                  "train.global_batch=2", "obs.peak_tflops=0.001"],
+            arch="qwen2-0.5b", smoke=True, trace_out=str(out),
+        )
+        session = Session(cfg)
+        session.run()
+        return session, out
+
+    def test_online_diagnosis_names_slow_rank_during_run(self, live_run):
+        session, _ = live_run
+        online = session.results["scan"]["online"]
+        assert online["slow_ranks"] == [1]
+        # "during the run": the first hit lands before the last pass,
+        # well inside the 12-step run
+        assert online["first_detect_step"] is not None
+        assert online["first_detect_step"] <= 8
+        assert online["passes"] >= 2
+
+    def test_diagnosis_instant_event_in_trace(self, live_run):
+        session, out = live_run
+        doc = json.loads(out.read_text())
+        marks = [e for e in doc["traceEvents"]
+                 if e.get("ph") == "i" and e["name"] == "diagnosis"]
+        assert marks and marks[0]["args"]["slow_ranks"] == [1]
+        assert marks[0]["args"]["new"] == [1]
+
+    def test_metrics_render_as_counter_tracks(self, live_run):
+        _, out = live_run
+        doc = json.loads(out.read_text())
+        counters = [e for e in doc["traceEvents"] if e.get("ph") == "C"]
+        names = {e["name"] for e in counters}
+        assert "train.loss" in names
+        assert "train.step_time_s.p50" in names
+        assert all("value" in e["args"] for e in counters)
+
+    def test_mfu_estimate_reported(self, live_run):
+        session, _ = live_run
+        assert session.results["metrics"].get("mfu_est", 0) > 0
+
+    def test_streamed_sidecar_redetects_offline(self, live_run):
+        from repro.app.cli import run
+
+        session, out = live_run
+        side = out.with_suffix(".jsonl")
+        assert str(side) == session.results["scan"]["stream"]
+        assert side.exists() and len(load_jsonl(side)) > 0
+        res = run(["trace", "--detect", str(side),
+                   "--dp", "2", "--pp", "1", "--tp", "1"])
+        assert res["diagnosis"]["slow_ranks"] == [1]
