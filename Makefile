@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test ci cli-smoke bench-serve bench-pp bench-obs docs-check deps deps-dev
+.PHONY: test ci cli-smoke bench-serve bench-pp bench-obs bench-ft docs-check deps deps-dev
 
 # tier-1 verification
 test:
@@ -18,7 +18,7 @@ cli-smoke:
 	python -m repro serve --arch qwen2-0.5b --smoke --continuous \
 		--requests 8 --max-new 8 --rate 500
 
-ci: test docs-check cli-smoke bench-pp bench-obs
+ci: test docs-check cli-smoke bench-pp bench-obs bench-ft
 
 # decode-latency-vs-max_len sweep (paged vs gathered) + continuous-vs-static;
 # persists the perf trajectory to BENCH_serve.json
@@ -34,6 +34,12 @@ bench-pp:
 # bare train loop; asserts < 5% median step overhead, persists BENCH_obs.json
 bench-obs:
 	python benchmarks/obs_bench.py --out BENCH_obs.json
+
+# fault-tolerance gate: crash -> restore -> replay must complete with the
+# fault-free final loss; recovery overhead + checkpoint stall are bounded
+# and persisted to BENCH_ft.json
+bench-ft:
+	python benchmarks/ft_bench.py --out BENCH_ft.json
 
 deps:
 	pip install -r requirements.txt

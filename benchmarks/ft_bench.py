@@ -1,0 +1,202 @@
+"""Fault-tolerance gate: recovery overhead + checkpoint stall.
+
+Three arms of the same CPU-smoke training run, wall-clocked end-to-end and
+per-step (the timer plugin's ``wrap_step`` blocks on the loss):
+
+* **clean** — metrics only, no checkpointing: the loss-parity reference;
+* **ckpt**  — supervised (``ft`` module) with periodic async checkpoints:
+  isolates the steady-state checkpoint cost, and the per-step entries
+  separate the snapshot stall (deltas that include a ``save_async``) from
+  ordinary steps;
+* **chaos** — same, plus an injected crash mid-run: the loop restores the
+  latest checkpoint and replays, and the extra wall over the **ckpt** arm
+  is the true recovery overhead (restore + replayed steps).
+
+Arms alternate across ``--repeats`` runs; wall floors (min) and per-step
+medians (min-of-medians) score each arm.  Gates:
+
+* the chaos arm completes every step with exactly one restart;
+* its final loss matches the clean arm to fp32 tolerance (step-indexed
+  batch determinism + sharding-preserving restore = same trajectory);
+* recovery overhead stays under ``--max-overhead`` of the ckpt arm;
+* the checkpoint-step stall stays under ``--max-stall-frac`` of an
+  ordinary step.
+
+    PYTHONPATH=src python benchmarks/ft_bench.py --out BENCH_ft.json
+    make bench-ft
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.app.config import build_run_config
+from repro.app.plugins import ModulePlugin, build_plugins
+from repro.app.session import Session
+
+WARMUP = 2  # leading deltas dropped from per-step stats (compile settles)
+
+
+class _StepTimer(ModulePlugin):
+    name = "bench-timer"
+
+    def __init__(self, run_cfg):
+        super().__init__(run_cfg)
+        self.entries: list[float] = []
+
+    def wrap_step(self, step_fn):
+        def timed(state, batch):
+            out = step_fn(state, batch)
+            jax.block_until_ready(out[1]["loss"])
+            self.entries.append(time.perf_counter())
+            return out
+
+        return timed
+
+
+def _arm(kind: str, *, arch: str, steps: int, ckpt_every: int,
+         crash_at: int, workdir: Path) -> dict:
+    sets = [
+        f"train.steps={steps}", "train.seq_len=128", "train.global_batch=4",
+        f"train.log_every={steps}",
+    ]
+    modules: tuple[str, ...] = ("metrics",)
+    if kind != "clean":
+        ckpt_dir = workdir / f"ckpt-{kind}"
+        sets += [f"train.ckpt_dir={ckpt_dir}",
+                 f"train.ckpt_every={ckpt_every}"]
+        modules = ("metrics", "ft")
+    if kind == "chaos":
+        sets += [f"ft.chaos.crash_at_step={crash_at}"]
+    cfg = build_run_config("train", arch=arch, smoke=True, sets=sets)
+    timer = _StepTimer(cfg)
+    session = Session(cfg, plugins=build_plugins(modules, cfg) + [timer])
+    t0 = time.perf_counter()
+    session.run()
+    wall = time.perf_counter() - t0
+
+    deltas = np.diff(timer.entries)
+    steady = deltas[WARMUP:] if len(deltas) > 2 * WARMUP else deltas
+    out = {
+        "wall_s": round(wall, 3),
+        "steps_run": len(timer.entries),
+        "step_ms_median": round(float(np.median(steady)) * 1e3, 3),
+        "final_loss": session.results["history"][-1]["loss"],
+        "final_step": session.results["history"][-1]["step"],
+    }
+    if kind == "ckpt":
+        # a save_async issued after step s lands in that step's exit delta:
+        # snapshot-to-host runs synchronously before the thread hands off
+        is_ckpt = np.array([(k + 1) % ckpt_every == 0
+                            for k in range(len(deltas))])[WARMUP:]
+        if is_ckpt.any() and (~is_ckpt).any():
+            out["ckpt_step_ms"] = round(float(np.median(steady[is_ckpt])) * 1e3, 3)
+            out["plain_step_ms"] = round(float(np.median(steady[~is_ckpt])) * 1e3, 3)
+    if kind != "clean":
+        ft = session.results["ft"]
+        out["restarts"] = ft["restarts"]
+        out["timeline_events"] = [t["event"] for t in ft["timeline"]]
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--ckpt-every", type=int, default=4)
+    ap.add_argument("--crash-at", type=int, default=10,
+                    help="chaos arm: injected crash step (restores to the "
+                         "floor multiple of --ckpt-every and replays)")
+    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--max-overhead", type=float, default=1.0,
+                    help="gate: chaos/ckpt wall - 1 must stay below this")
+    ap.add_argument("--max-stall-frac", type=float, default=2.0,
+                    help="gate: (ckpt-step - plain-step)/plain-step cap")
+    ap.add_argument("--out", default="", help="write BENCH_ft.json")
+    args = ap.parse_args()
+
+    arms: dict[str, list[dict]] = {"clean": [], "ckpt": [], "chaos": []}
+    with tempfile.TemporaryDirectory() as td:
+        workdir = Path(td)
+        for rep in range(args.repeats):
+            for kind in ("clean", "ckpt", "chaos"):
+                # each run gets a fresh checkpoint dir (no cross-run resume)
+                d = workdir / f"rep{rep}"
+                d.mkdir(exist_ok=True)
+                arms[kind].append(_arm(
+                    kind, arch=args.arch, steps=args.steps,
+                    ckpt_every=args.ckpt_every, crash_at=args.crash_at,
+                    workdir=d,
+                ))
+                r = arms[kind][-1]
+                print(f"  rep {rep} {kind:5s}: {r['wall_s']:.2f}s wall, "
+                      f"{r['step_ms_median']:.1f} ms/step"
+                      + (f", {r['restarts']} restart(s)"
+                         if "restarts" in r else ""))
+
+    clean = min(arms["clean"], key=lambda r: r["wall_s"])
+    ckpt = min(arms["ckpt"], key=lambda r: r["wall_s"])
+    chaos = min(arms["chaos"], key=lambda r: r["wall_s"])
+
+    recovery_overhead = chaos["wall_s"] / ckpt["wall_s"] - 1.0
+    loss_ok = bool(np.isclose(
+        chaos["final_loss"], clean["final_loss"], rtol=1e-5))
+    complete_ok = (chaos["final_step"] == args.steps
+                   and all(r["restarts"] == 1 for r in arms["chaos"]))
+    stall_frac = None
+    if "ckpt_step_ms" in ckpt:
+        stall_frac = (ckpt["ckpt_step_ms"] - ckpt["plain_step_ms"]) \
+            / ckpt["plain_step_ms"]
+    stall_ok = stall_frac is None or stall_frac < args.max_stall_frac
+    overhead_ok = recovery_overhead < args.max_overhead
+    ok = loss_ok and complete_ok and stall_ok and overhead_ok
+
+    print(f"clean : {clean['wall_s']:.2f}s  loss {clean['final_loss']:.6f}")
+    print(f"ckpt  : {ckpt['wall_s']:.2f}s"
+          + (f"  ckpt-step {ckpt['ckpt_step_ms']:.1f} ms vs "
+             f"plain {ckpt['plain_step_ms']:.1f} ms "
+             f"(stall {stall_frac * 100:+.1f}%, "
+             f"gate < {args.max_stall_frac * 100:.0f}%)"
+             if stall_frac is not None else ""))
+    print(f"chaos : {chaos['wall_s']:.2f}s  loss {chaos['final_loss']:.6f}  "
+          f"recovery overhead {recovery_overhead * 100:+.1f}% "
+          f"(gate < {args.max_overhead * 100:.0f}%)")
+    print(f"loss parity {'OK' if loss_ok else 'FAIL'}, "
+          f"completion {'OK' if complete_ok else 'FAIL'} -> "
+          f"{'OK' if ok else 'FAIL'}")
+
+    results = {
+        "arch": args.arch,
+        "steps": args.steps,
+        "ckpt_every": args.ckpt_every,
+        "crash_at": args.crash_at,
+        "repeats": args.repeats,
+        "clean": clean,
+        "ckpt": ckpt,
+        "chaos": chaos,
+        "recovery_overhead_frac": round(recovery_overhead, 4),
+        "ckpt_stall_frac": round(stall_frac, 4) if stall_frac is not None else None,
+        "loss_parity_ok": loss_ok,
+        "completion_ok": complete_ok,
+        "max_overhead": args.max_overhead,
+        "max_stall_frac": args.max_stall_frac,
+        "ok": bool(ok),
+        "backend": jax.default_backend(),
+    }
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+        print(f"wrote {args.out}")
+    if not ok:
+        raise SystemExit("ft bench gate failed (see above)")
+
+
+if __name__ == "__main__":
+    main()

@@ -37,7 +37,7 @@ _SHARED = [
     ("--seed", "seed", dict(type=int)),
     ("--modules", "modules", dict(
         type=str, metavar="M1,M2",
-        help="module plugins to attach (scan,metrics,scope,fbd,dpp; "
+        help="module plugins to attach (scan,metrics,ft,scope,fbd,dpp; "
              "'none' = off)")),
     ("--mesh", "mesh", dict(
         choices=("auto", "auto-mp", "host", "pod1", "pod2"))),
@@ -67,6 +67,14 @@ _TRAIN = [
     ("--schedule", "train.schedule", dict(choices=("cosine", "wsd", "constant"))),
     ("--grad-accum", "train.grad_accum", dict(type=int)),
     ("--ckpt-dir", "train.ckpt_dir", dict(type=str)),
+    ("--ckpt-every", "train.ckpt_every", dict(type=int)),
+    ("--max-restarts", "ft.max_restarts", dict(
+        type=int, help="bounded restarts for the supervised loop "
+                       "(the ft module; see --set ft.* / ft.chaos.*)")),
+    ("--chaos-crash-at", "ft.chaos.crash_at_step", dict(
+        type=int, metavar="STEP",
+        help="chaos: inject a real crash at this step (needs --ckpt-dir "
+             "and the ft module; one of the --set ft.chaos.* knobs)")),
     ("--multi-pod", "mesh", dict(action="store_const", const="auto-mp")),
 ]
 
@@ -256,7 +264,7 @@ def run(argv: list[str]) -> dict:
                   f"{'CORRECT' if t['detected'] else 'MISMATCH'} "
                   f"(truth={t['slow_ranks']})")
     _print_results({k: v for k, v in session.results.items()
-                    if k in ("scan", "metrics", "scope", "fbd", "dpp",
+                    if k in ("scan", "metrics", "ft", "scope", "fbd", "dpp",
                              "parallel", "trace_out")})
     return session.results
 

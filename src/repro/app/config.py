@@ -174,6 +174,44 @@ class ObsSection:
 
 
 @dataclass
+class FtChaosSection:
+    """Declarative chaos injection (``--set ft.chaos.*``; see
+    :class:`repro.ft.chaos.ChaosSpec`).  All defaults mean "nothing fails"."""
+
+    crash_at_step: int = -1        # raise a real crash at this step (< 0 off)
+    nan_at_step: int = -1          # poison this step's batch to a NaN loss
+    slow_rank_from: int = -1       # downclock slow_rank from this step on
+    slow_rank: int = 1
+    slow_factor: float = 0.5       # its relative speed (0.5 = half)
+    degrade_link: str = ""         # directed DP link "src-dst" ("" = healthy)
+    degrade_factor: float = 0.25   # its relative bandwidth
+
+
+@dataclass
+class FtSection:
+    """Fault-tolerance controller (the ``ft`` module plugin).
+
+    Subscribes to the scan plugin's online ``DetectionUpdate``s, decides via
+    ``MitigationPolicy`` (thresholds below), and executes: REPLAN switches
+    on int8 gradient compression for a degraded DP link or re-resolves the
+    MegaDPP schedule around a slow pipeline stage; EXCLUDE_RESTART rolls
+    back through the Checkpointer.  The loop itself becomes supervised:
+    crash -> restore-latest -> resume (bounded by ``max_restarts``), with
+    in-band NaN/grad-spike guards.
+    """
+
+    max_restarts: int = 3
+    backoff_s: float = 0.0         # restart backoff base (doubles per restart)
+    guard_nan: bool = True         # nonfinite loss/grad -> guard_action
+    guard_spike: float = 0.0       # >0: grad_norm > this x running median
+    guard_action: str = "rollback"  # rollback | skip
+    slow_frac_soft: float = 0.3    # policy: slow-op fraction -> REPLAN
+    slow_frac_hard: float = 0.7    # policy: -> EXCLUDE_RESTART
+    min_evidence: int = 8          # collective instances before acting
+    chaos: FtChaosSection = field(default_factory=FtChaosSection)
+
+
+@dataclass
 class TraceSection:
     """Offline MegaScan workload: simulate (or load) -> align -> detect."""
 
@@ -220,6 +258,7 @@ class RunConfig:
     serve: ServeSection = field(default_factory=ServeSection)
     scan: ScanSection = field(default_factory=ScanSection)
     obs: ObsSection = field(default_factory=ObsSection)
+    ft: FtSection = field(default_factory=FtSection)
     scope: ScopeSection = field(default_factory=ScopeSection)
     fbd: FbdSection = field(default_factory=FbdSection)
     dpp: DppSection = field(default_factory=DppSection)

@@ -146,6 +146,10 @@ class ScanPlugin(ModulePlugin):
             if update is not None:
                 if update.diagnosis.slow_ranks and self._first_detect is None:
                     self._first_detect = update.step
+                # every completed pass flows to registered detection
+                # listeners (the ft controller) — they decide on the full
+                # diagnosis, not just the delta
+                session.notify_detection(update)
                 if update.changed:
                     session.tracer.instant(
                         "diagnosis",
@@ -261,6 +265,86 @@ class MetricsPlugin(ModulePlugin):
                 flops_s["p50"] / (self._obs.peak_tflops * 1e12), 6
             )
         return out
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance — the detect -> decide -> mitigate -> recover controller
+# ---------------------------------------------------------------------------
+
+
+@register_plugin
+class FtPlugin(ModulePlugin):
+    """Owns the session :class:`repro.ft.FtController`.
+
+    Closes the loop the scan plugin's ``--detect-online`` opens: every
+    online ``DetectionUpdate`` runs through ``MitigationPolicy.decide``, and
+    the decisions execute *in the train loop* — gradient compression for a
+    degraded DP link, a MegaDPP schedule replan around a slow stage, or a
+    rank exclusion + checkpoint rollback.  The same controller supervises
+    the loop (crash -> restore-latest -> resume, NaN/grad-spike guards) and
+    drives the declarative chaos spec (``--set ft.chaos.*``) that proves the
+    recovery end to end.  ``finalize`` reports the mitigation timeline,
+    restart/rollback counters, and exclusions as ``results["ft"]``.
+    """
+
+    name = "ft"
+
+    def setup(self, session) -> None:
+        from repro.ft import (
+            ChaosInjector,
+            ChaosSpec,
+            FtController,
+            FtOptions,
+            MitigationPolicy,
+        )
+
+        sec = self.run_cfg.ft
+        c = sec.chaos
+        spec = ChaosSpec(
+            crash_at_step=c.crash_at_step, nan_at_step=c.nan_at_step,
+            slow_rank_from=c.slow_rank_from, slow_rank=c.slow_rank,
+            slow_factor=c.slow_factor, degrade_link=c.degrade_link,
+            degrade_factor=c.degrade_factor,
+        )
+        if sec.guard_action not in ("rollback", "skip"):
+            raise ValueError(
+                f"ft.guard_action must be rollback|skip, got {sec.guard_action!r}"
+            )
+        needs_ckpt = spec.crash_at_step >= 0 or (
+            spec.nan_at_step >= 0 and sec.guard_action == "rollback"
+        )
+        if needs_ckpt and not self.run_cfg.train.ckpt_dir:
+            raise ValueError(
+                "ft.chaos crash/NaN-rollback recovery needs train.ckpt_dir "
+                "(--ckpt-dir) for a restore target"
+            )
+        if ((spec.slow_rank_from >= 0 or spec.degrade_link)
+                and not self.run_cfg.scan.detect_online):
+            import logging
+
+            logging.getLogger("repro.ft").warning(
+                "ft.chaos injects a straggler/degraded link but "
+                "scan.detect_online is off — nothing will detect or "
+                "mitigate it (add --detect-online)"
+            )
+        self.controller = FtController(
+            policy=MitigationPolicy(
+                slow_frac_soft=sec.slow_frac_soft,
+                slow_frac_hard=sec.slow_frac_hard,
+                min_evidence=sec.min_evidence,
+            ),
+            chaos=ChaosInjector(spec) if spec.active else None,
+            options=FtOptions(
+                max_restarts=sec.max_restarts, backoff_s=sec.backoff_s,
+                guard_nan=sec.guard_nan, guard_spike=sec.guard_spike,
+                guard_action=sec.guard_action,
+            ),
+        )
+        session.ft_controller = self.controller
+        session.detection_listeners.append(self.controller.on_detection)
+
+    def finalize(self, session) -> dict:
+        return self.controller.report()
 
 
 # ---------------------------------------------------------------------------

@@ -100,6 +100,11 @@ class Session:
         self.tracer = Tracer(rank=0, enabled=False)
         self.collector = NULL_COLLECTOR
         self.metrics_registry = None
+        # no ft plugin -> no controller (the train loop runs unsupervised);
+        # detection listeners receive every online DetectionUpdate the scan
+        # plugin's detector produces
+        self.ft_controller = None
+        self.detection_listeners: list[Callable] = []
         self.results: dict[str, Any] = {}
         self.plugins = (
             plugins if plugins is not None
@@ -126,6 +131,12 @@ class Session:
     def notify_step(self, events, metrics) -> None:
         for p in self.plugins:
             p.on_step(self, events, metrics)
+
+    def notify_detection(self, update) -> None:
+        """Fan one online ``DetectionUpdate`` out to detection listeners
+        (the ft controller registers here) — called by the scan plugin."""
+        for listener in self.detection_listeners:
+            listener(update)
 
     def step_hooks(self):
         from repro.train.loop import StepHooks
@@ -184,7 +195,11 @@ class Session:
         """Resolve the ``obs`` section into a per-rank event synthesis spec
         (``None`` unless rank events or straggler induction are asked for)."""
         o = self.run_cfg.obs
-        if not (o.rank_events or o.slow_rank >= 0):
+        ch = self.run_cfg.ft.chaos
+        chaos_needs = self.ft_controller is not None and (
+            ch.slow_rank_from >= 0 or bool(ch.degrade_link)
+        )
+        if not (o.rank_events or o.slow_rank >= 0 or chaos_needs):
             return None
         from repro.obs import RankEventSpec
 
@@ -275,6 +290,7 @@ class Session:
                 collector=self.collector, tracer=self.tracer,
                 hooks=self.step_hooks(), plan=plan,
                 registry=self.metrics_registry, obs=self._rank_event_spec(),
+                controller=self.ft_controller,
             )
         self.results["history"] = history
         return state, history

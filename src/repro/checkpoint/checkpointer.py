@@ -125,12 +125,19 @@ class Checkpointer:
         self._error: Exception | None = None
 
     def wait(self) -> None:
+        err = self.drain()
+        if err is not None:
+            raise err
+
+    def drain(self) -> Exception | None:
+        """Join the background save and *return* its error instead of
+        raising — for failure paths that must not let a background-save
+        error mask the original exception being handled."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
-        if self._error is not None:
-            err, self._error = self._error, None
-            raise err
+        err, self._error = self._error, None
+        return err
 
     def save_async(self, state: Any, step: int, metadata: dict | None = None) -> None:
         self.wait()

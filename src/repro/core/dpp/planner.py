@@ -97,12 +97,12 @@ class Planner:
 
     def replan(self, diagnosis) -> PlanResult:
         """Fold MegaScan telemetry into the resource picture and re-plan."""
-        slow = {r: 0.5 for r in getattr(diagnosis, "slow_ranks", [])}
-        links = {l: 0.5 for l in getattr(diagnosis, "degraded_links", [])}
-        self.faults = FaultModel(
-            compute_slowdown={**self.faults.compute_slowdown, **slow},
-            link_slowdown={**self.faults.link_slowdown, **links},
-            jitter=self.faults.jitter,
-            seed=self.faults.seed,
+        self.faults = self.faults.merged(
+            compute_slowdown={
+                r: 0.5 for r in getattr(diagnosis, "slow_ranks", [])
+            },
+            link_slowdown={
+                tuple(l): 0.5 for l in getattr(diagnosis, "degraded_links", [])
+            },
         )
         return self.plan()

@@ -85,6 +85,22 @@ class FaultModel:
     def link(self, src: int, dst: int) -> float:
         return self.link_slowdown.get((src, dst), 1.0)
 
+    def merged(
+        self,
+        *,
+        compute_slowdown: dict[int, float] | None = None,
+        link_slowdown: dict[tuple[int, int], float] | None = None,
+    ) -> "FaultModel":
+        """A new model with fresh telemetry folded over this one (newer
+        observations win) — how ``Planner.replan`` and the live ft
+        controller update the resource picture between iterations."""
+        return FaultModel(
+            compute_slowdown={**self.compute_slowdown, **(compute_slowdown or {})},
+            link_slowdown={**self.link_slowdown, **(link_slowdown or {})},
+            jitter=self.jitter,
+            seed=self.seed,
+        )
+
 
 @dataclass
 class EngineResult:

@@ -1,5 +1,20 @@
-from repro.ft.mitigation import MitigationAction, MitigationPolicy
-from repro.ft.failover import TrainSupervisor
+from repro.ft.chaos import ChaosInjector, ChaosSpec, InjectedCrash, parse_link, simulate_policy
 from repro.ft.compress import GradCompressor
+from repro.ft.controller import FtController, FtOptions, PendingAction
+from repro.ft.failover import TrainSupervisor
+from repro.ft.mitigation import MitigationAction, MitigationPolicy
 
-__all__ = ["MitigationAction", "MitigationPolicy", "TrainSupervisor", "GradCompressor"]
+__all__ = [
+    "ChaosInjector",
+    "ChaosSpec",
+    "FtController",
+    "FtOptions",
+    "GradCompressor",
+    "InjectedCrash",
+    "MitigationAction",
+    "MitigationPolicy",
+    "PendingAction",
+    "TrainSupervisor",
+    "parse_link",
+    "simulate_policy",
+]

@@ -47,12 +47,21 @@ class TrainSupervisor:
                 log.warning("step %d failed (%s); restart %d", step, e, restarts)
                 if restarts > self.max_restarts:
                     raise
-                ckpt.wait()
+                # drain (not wait): a background save error here must not
+                # mask the step failure we are recovering from — log it and
+                # continue to the restore attempt
+                bg = ckpt.drain()
+                if bg is not None:
+                    log.warning("background checkpoint save failed (%s); "
+                                "restoring from the previous one", bg)
                 last = latest_step(self.ckpt_dir)
                 if last is None:
                     raise
                 state, _ = restore(self.ckpt_dir, state)
                 step = last
+                # drop history rows past the restored step — the replayed
+                # steps re-append them; keeping both double-counts
+                self.history = [h for h in self.history if h["step"] < last]
                 if self.on_restore is not None:
                     state = self.on_restore(state, step)
         ckpt.wait()

@@ -26,6 +26,9 @@ from repro.core.tracing.events import TraceEvent
 
 # healthy step budget: fwd 30%, bwd 50%, gradient all-reduce the last 20%
 _FWD_FRAC, _BWD_FRAC = 0.3, 0.5
+# nominal P2P ring payload per step (only the bytes/duration *ratio* feeds
+# stage 3's effective-bandwidth comparison)
+_P2P_BYTES = 1 << 20
 
 
 @dataclass(frozen=True)
@@ -42,6 +45,11 @@ class RankEventSpec:
     tp: int = 1
     slow_rank: int = -1
     slow_factor: float = 0.5
+    # degraded directed link (FaultModel.link_slowdown semantics): when set,
+    # a ring of P2P sends is synthesized each step with this edge running at
+    # ``degrade_factor`` of the healthy bandwidth — stage 3's signature
+    degrade_link: tuple[int, int] | None = None
+    degrade_factor: float = 0.25
 
     @property
     def world(self) -> int:
@@ -96,3 +104,16 @@ def emit_rank_events(
             "allreduce_grads", r, start, max(ts + wall - start, 1e-9), "coll",
             {"op": "allreduce", "group": group, "mb": step, "phase": "G"},
         ))
+    if spec.degrade_link is not None and spec.world >= 2:
+        # a ring of activation-sized P2P sends, concurrent with compute:
+        # healthy edges move _P2P_BYTES in 10% of the step, the degraded
+        # edge takes 1/degrade_factor as long for the same payload — the
+        # effective-bandwidth dip stage 3 flags against the ring median
+        healthy_dur = 0.1 * base
+        for r in range(spec.world):
+            dst = (r + 1) % spec.world
+            slow = 1.0 / spec.degrade_factor if (r, dst) == spec.degrade_link else 1.0
+            events.append(TraceEvent(
+                "p2p_send", r, ts, healthy_dur * slow, "p2p",
+                {"dir": "send", "peer": dst, "bytes": _P2P_BYTES, "mb": step},
+            ))

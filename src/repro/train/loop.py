@@ -1,18 +1,36 @@
 """End-to-end training driver: data pipeline + jitted train step + async
-checkpointing + MegaScan tracing + optional MegaScope probes + failover.
+checkpointing + MegaScan tracing + optional MegaScope probes + supervised
+fault tolerance.
 
 The `python -m repro train` workload drives this loop through
 ``repro.app.Session`` (module plugins attach via :class:`StepHooks`); the
 fault-tolerance tests call ``train`` directly.  The same loop drives the
 multi-pod configuration (the jit step is mesh-agnostic — shardings come
 from the installed axis rules).
+
+With a :class:`repro.ft.FtController` attached (the ``ft`` module plugin),
+the loop is *supervised*: any step failure — a chaos-injected crash, a
+mitigation-requested exclusion restart, a guard rollback — restores the
+latest checkpoint and resumes, bounded by ``ft.max_restarts`` with
+exponential backoff.  Step-indexed batch determinism
+(``SyntheticTokens.batch_at``) makes the replayed trajectory identical to a
+fault-free run.  The controller's pending mitigation actions execute at
+step boundaries:
+
+* **compress_on** — rebuild the jit step with ``GradCompressor`` int8
+  gradient sync + error feedback (degraded DP link mitigation);
+* **replan_schedule** — re-resolve the MegaDPP wave schedule around a slow
+  pipeline stage and rebuild the pipelined step;
+* **exclude_restart** — mark the rank excluded (its induced slowdown
+  stops, so the detector observes the recovery) and roll back through the
+  elastic-restore path.
 """
 
 from __future__ import annotations
 
 import logging
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable
 
 import jax
@@ -52,6 +70,14 @@ class StepHooks:
     on_step: Callable[[list, dict], None] | None = None
 
 
+class _MitigationRestart(RuntimeError):
+    """The controller decided EXCLUDE_RESTART: roll back and resume."""
+
+
+class _GuardRollback(RuntimeError):
+    """An in-band guard tripped with guard_action=rollback."""
+
+
 def _step_flops(jit_step, state, batch) -> float:
     """Model flops of one jitted step via XLA's cost analysis (the MFU
     numerator).  ``Lowered.cost_analysis`` needs no compile; fall back to
@@ -68,6 +94,11 @@ def _step_flops(jit_step, state, batch) -> float:
         return float(cost.get("flops", 0.0) or 0.0)
     except Exception:
         return 0.0
+
+
+def _shardings(state):
+    """Per-leaf shardings of the live state (the elastic-restore target)."""
+    return jax.tree.map(lambda x: getattr(x, "sharding", None), state)
 
 
 _MEM_STATS_SUPPORTED: bool | None = None  # probed once; CPU returns None
@@ -105,7 +136,7 @@ def _publish_step_metrics(registry, metrics, *, step_s, tokens, flops):
             registry.gauge(f"train.{k}").set(float(v))
     mem = _device_mem_bytes()
     if mem is not None:
-        registry.gauge("train.device_mem_bytes").set(mem)
+        registry.gauge(f"train.device_mem_bytes").set(mem)
 
 
 def train(
@@ -121,37 +152,58 @@ def train(
     plan=None,
     registry=None,
     obs=None,
+    controller=None,
 ) -> tuple[Any, list[dict]]:
     # tracing defaults ON, matching MegaServe — the repo-wide documented
     # default (observability is always-on; pass a disabled Tracer to opt out)
     # ``registry`` (a repro.obs.MetricsRegistry) receives the standard train
     # series each step; ``obs`` (a repro.obs.RankEventSpec) synthesizes
-    # per-rank events — and induces a live straggler when its slow_rank >= 0
+    # per-rank events — and induces a live straggler when its slow_rank >= 0;
+    # ``controller`` (a repro.ft.FtController) supervises the whole loop
     tracer = tracer or Tracer(rank=0, enabled=True)
     ds = SyntheticTokens(data_cfg)
     if state is None:
         with tracer.scope("init", op="init"):
             state = init_train_state(cfg, jax.random.PRNGKey(loop.seed))
+    if controller is not None:
+        controller.registry = registry
 
-    raw_step = make_train_step(
-        cfg, ocfg, grad_accum=loop.grad_accum, collector=collector, plan=plan
-    )
-    # pp>1 steps carry their static dispatch table; MegaScan folds it into
-    # per-(microbatch, stage, F/B) events after each measured step
-    pp_info = getattr(raw_step, "pipeline", None)
     # when compute dtype == param dtype the bf16 cast is a no-op and
     # state.params aliases state.master — donating the state would hand XLA
     # the same buffer twice (Execute() rejects it; under SPMD the surviving
     # devices then hang at the next collective).  Donation is a pure memory
-    # optimization, so drop it for same-dtype (fp32 smoke) configs.
-    donate = (
-        (0,) if np.dtype(cfg.compute_dtype) != np.dtype(cfg.param_dtype)
-        else ()
+    # optimization, so drop it for same-dtype (fp32 smoke) configs — and for
+    # skip-guard runs, whose semantics need the pre-step buffers alive.
+    may_donate = (
+        np.dtype(cfg.compute_dtype) != np.dtype(cfg.param_dtype)
+        and not (controller is not None
+                 and controller.options.guard_action == "skip")
     )
-    jit_step = jax.jit(raw_step, donate_argnums=donate)
-    step_fn = jit_step
-    if hooks is not None and hooks.wrap_step is not None:
-        step_fn = hooks.wrap_step(step_fn)
+
+    def build(plan_, compressor=None):
+        """(Re)build the wrapped jit step — also the mitigation rebuild path
+        (compression on, schedule replanned); runs under the ambient mesh
+        Session installed around this loop."""
+        raw = make_train_step(
+            cfg, ocfg, grad_accum=loop.grad_accum, collector=collector,
+            plan=plan_, compressor=compressor,
+        )
+        # pp>1 steps carry their static dispatch table; MegaScan folds it
+        # into per-(microbatch, stage, F/B) events after each measured step
+        pp = getattr(raw, "pipeline", None)
+        donate = (
+            ((0, 1) if compressor is not None else (0,)) if may_donate else ()
+        )
+        jit_fn = jax.jit(raw, donate_argnums=donate)
+        fn = jit_fn
+        if hooks is not None and hooks.wrap_step is not None:
+            fn = hooks.wrap_step(fn)
+        return fn, jit_fn, pp
+
+    step_fn, jit_step, pp_info = build(plan)
+    comp = None            # GradCompressor once the mitigation activates
+    comp_err = None        # its error-feedback buffers
+    comp_wire = (0, 0)     # (compressed, bf16-baseline) bytes per step
 
     start = 0
     ckpt = None
@@ -159,9 +211,13 @@ def train(
         ckpt = Checkpointer(loop.ckpt_dir)
         last = latest_step(loop.ckpt_dir)
         if last is not None:
-            state, _ = restore(loop.ckpt_dir, state)
+            state, _ = restore(loop.ckpt_dir, state, shardings=_shardings(state))
             start = last
             log.info("restored checkpoint at step %d", start)
+        elif controller is not None:
+            # supervised runs always have a rollback target, even before
+            # the first periodic save lands
+            ckpt.save_async(state, 0, metadata={"arch": cfg.name})
 
     # MFU numerator, once: the flops XLA attributes to one step (lowering
     # uses the same in-memory jit, so the first real call still compiles
@@ -172,58 +228,218 @@ def train(
     )
     tokens_per_step = data_cfg.global_batch * data_cfg.seq_len
 
+    guards_on = controller is not None and (
+        controller.options.guard_nan or controller.options.guard_spike > 0
+    )
+    skip_guard = (
+        guards_on and controller.options.guard_action == "skip"
+    )
+    max_restarts = controller.options.max_restarts if controller is not None else 0
+    backoff_s = controller.options.backoff_s if controller is not None else 0.0
+
     history: list[dict] = []
     t0 = time.perf_counter()
-    for step in range(start, loop.n_steps):
-        batch = ds.batch_at(step)
-        n_ev = len(tracer.events)
-        t_step = time.perf_counter()
-        with tracer.scope("train_step", op="train_step", mb=step):
-            state, metrics = step_fn(state, batch)
-            extra = 0.0
-            if obs is not None and obs.slow_rank >= 0:
-                # induce the straggler INSIDE the scope: block until the
-                # real compute lands, then sleep the downclock excess —
-                # the step window genuinely stretches, like a slow rank's
-                jax.block_until_ready(metrics)
-                extra = obs.extra_seconds(time.perf_counter() - t_step)
-                if extra > 0:
-                    time.sleep(extra)
-        step_s = time.perf_counter() - t_step
-        anchor = tracer.events[-1] if tracer.enabled else None
-        if pp_info is not None and anchor is not None:
-            from repro.core.dpp.executor import emit_pipeline_events
+    step = start
+    attempts = 0
+    while step < loop.n_steps:
+        try:
+            if controller is not None:
+                for act in controller.poll():
+                    if act.kind == "exclude":
+                        controller.excluded.update(act.slow_ranks)
+                        controller.record(step, "mitigate:exclude", {
+                            "ranks": sorted(act.slow_ranks),
+                            "detect_step": act.detect_step,
+                            "restart": ckpt is not None,
+                        })
+                        if ckpt is not None:
+                            raise _MitigationRestart(
+                                f"excluding ranks {sorted(act.slow_ranks)}"
+                            )
+                        log.warning("ft: excluding %s without restart "
+                                    "(no ckpt_dir)", sorted(act.slow_ranks))
+                    elif act.degraded_links and comp is None and (
+                        plan is None or plan.pp <= 1
+                    ):
+                        from repro.ft.compress import GradCompressor
 
-            # the train_step scope just closed; fold its wall into
-            # per-(microbatch, stage, F/B) pipeline events
-            emit_pipeline_events(
-                tracer.events, pp_info.table,
-                ts=anchor.ts, wall=anchor.dur, step_idx=step,
-            )
-        if obs is not None and anchor is not None:
-            from repro.obs.inject import emit_rank_events
+                        comp = GradCompressor()
+                        comp_err = comp.init(state.master)
+                        comp_wire = comp.wire_bytes(state.master)
+                        step_fn, jit_step, pp_info = build(plan, compressor=comp)
+                        controller.replans += 1
+                        controller.compression_on = True
+                        controller.record(step, "mitigate:compress_on", {
+                            "links": [list(l) for l in act.degraded_links],
+                            "detect_step": act.detect_step,
+                            "wire_bytes_per_sync": comp_wire[0],
+                            "baseline_bytes_per_sync": comp_wire[1],
+                        })
+                        log.warning(
+                            "ft: int8 gradient sync ON (%.2fx wire bytes) "
+                            "for degraded links %s",
+                            comp_wire[0] / max(comp_wire[1], 1),
+                            [list(l) for l in act.degraded_links],
+                        )
+                    elif act.slow_ranks and plan is not None and plan.pp > 1:
+                        from dataclasses import replace as _dc_replace
+                        from types import SimpleNamespace
 
-            emit_rank_events(
-                tracer.events, obs,
-                ts=anchor.ts, wall=anchor.dur, extra=extra, step=step,
+                        from repro.core.dpp.planner import Planner
+                        from repro.core.simkit.workload import (
+                            ModelProfile,
+                            Topology,
+                        )
+
+                        planner = Planner(
+                            Topology(dp=plan.dp, pp=plan.pp, tp=plan.tp),
+                            ModelProfile(n_chunks=plan.n_chunks),
+                            n_micro=plan.n_micro,
+                        )
+                        res = planner.replan(SimpleNamespace(
+                            slow_ranks=list(act.slow_ranks),
+                            degraded_links=[tuple(l) for l in act.degraded_links],
+                        ))
+                        plan = _dc_replace(plan, schedule="wave", wave=res.wave)
+                        step_fn, jit_step, pp_info = build(plan)
+                        controller.replans += 1
+                        controller.record(step, "mitigate:replan_schedule", {
+                            "slow_ranks": sorted(act.slow_ranks),
+                            "detect_step": act.detect_step,
+                            "wave": res.wave,
+                            "makespan_ms": round(res.makespan * 1e3, 3),
+                        })
+                        log.warning("ft: replanned pipeline schedule -> "
+                                    "wave=%d around slow ranks %s",
+                                    res.wave, sorted(act.slow_ranks))
+                    else:
+                        controller.record(step, "mitigate:replan_noop", {
+                            "slow_ranks": sorted(act.slow_ranks),
+                            "detect_step": act.detect_step,
+                        })
+                if controller.crash_due(step):
+                    from repro.ft.chaos import InjectedCrash
+
+                    raise InjectedCrash(f"chaos: injected crash at step {step}")
+
+            batch = ds.batch_at(step)
+            eff_obs = (
+                controller.effective_obs(obs, step)
+                if controller is not None else obs
             )
-        if registry is not None:
-            _publish_step_metrics(
-                registry, metrics,
-                step_s=step_s, tokens=tokens_per_step, flops=flops,
-            )
-        if hooks is not None and hooks.on_step is not None:
-            hooks.on_step(tracer.events[n_ev:], metrics)
-        if (step + 1) % loop.log_every == 0 or step == loop.n_steps - 1:
-            m = {k: float(v) for k, v in metrics.items()
-                 if hasattr(v, "ndim") and v.ndim == 0}
-            m["step"] = step + 1
-            m["wall_s"] = round(time.perf_counter() - t0, 2)
-            history.append(m)
-            log.info("step %d: loss=%.4f lr=%.2e", step + 1,
-                     m.get("loss", float("nan")), m.get("lr", 0.0))
-        if ckpt and (step + 1) % loop.ckpt_every == 0:
-            ckpt.save_async(state, step + 1, metadata={"arch": cfg.name})
+            if controller is not None:
+                batch = controller.poison_batch(batch, step)
+            # skip-guard runs keep the pre-step buffers alive (they never
+            # donate) so a tripped guard can discard the poisoned update
+            prev_state, prev_err = (state, comp_err) if skip_guard else (None, None)
+            n_ev = len(tracer.events)
+            t_step = time.perf_counter()
+            with tracer.scope("train_step", op="train_step", mb=step):
+                if comp is None:
+                    state, metrics = step_fn(state, batch)
+                else:
+                    state, comp_err, metrics = step_fn(state, comp_err, batch)
+                extra = 0.0
+                if eff_obs is not None and eff_obs.slow_rank >= 0:
+                    # induce the straggler INSIDE the scope: block until the
+                    # real compute lands, then sleep the downclock excess —
+                    # the step window genuinely stretches, like a slow rank's
+                    jax.block_until_ready(metrics)
+                    extra = eff_obs.extra_seconds(time.perf_counter() - t_step)
+                    if extra > 0:
+                        time.sleep(extra)
+            step_s = time.perf_counter() - t_step
+            if guards_on:
+                verdict = controller.check_guards(
+                    step,
+                    float(metrics.get("loss", 0.0)),
+                    float(metrics.get("grad_norm", 0.0)),
+                )
+                if verdict == "rollback":
+                    raise _GuardRollback(f"guard tripped at step {step}")
+                if verdict == "skip":
+                    # discard the poisoned update (pre-step buffers are
+                    # alive: skip-guard runs never donate) and move on —
+                    # cheaper than a rollback, at the cost of diverging
+                    # from the fault-free trajectory by one skipped batch
+                    state, comp_err = prev_state, prev_err
+                    del tracer.events[n_ev:]
+                    step += 1
+                    continue
+            anchor = tracer.events[-1] if tracer.enabled else None
+            if pp_info is not None and anchor is not None:
+                from repro.core.dpp.executor import emit_pipeline_events
+
+                # the train_step scope just closed; fold its wall into
+                # per-(microbatch, stage, F/B) pipeline events
+                emit_pipeline_events(
+                    tracer.events, pp_info.table,
+                    ts=anchor.ts, wall=anchor.dur, step_idx=step,
+                )
+            if eff_obs is not None and anchor is not None:
+                from repro.obs.inject import emit_rank_events
+
+                emit_rank_events(
+                    tracer.events, eff_obs,
+                    ts=anchor.ts, wall=anchor.dur, extra=extra, step=step,
+                )
+            if registry is not None:
+                _publish_step_metrics(
+                    registry, metrics,
+                    step_s=step_s, tokens=tokens_per_step, flops=flops,
+                )
+                if comp is not None:
+                    registry.counter("ft.wire_bytes_compressed").inc(comp_wire[0])
+                    registry.counter("ft.wire_bytes_baseline").inc(comp_wire[1])
+            if hooks is not None and hooks.on_step is not None:
+                hooks.on_step(tracer.events[n_ev:], metrics)
+            if (step + 1) % loop.log_every == 0 or step == loop.n_steps - 1:
+                m = {k: float(v) for k, v in metrics.items()
+                     if hasattr(v, "ndim") and v.ndim == 0}
+                m["step"] = step + 1
+                m["wall_s"] = round(time.perf_counter() - t0, 2)
+                history.append(m)
+                log.info("step %d: loss=%.4f lr=%.2e", step + 1,
+                         m.get("loss", float("nan")), m.get("lr", 0.0))
+            step += 1
+            if ckpt and step % loop.ckpt_every == 0:
+                ckpt.save_async(state, step, metadata={"arch": cfg.name})
+        except Exception as e:  # noqa: BLE001 — the supervised recovery path
+            attempts += 1
+            if controller is None or ckpt is None or attempts > max_restarts:
+                raise
+            log.warning("step %d failed (%s: %s); recovery %d/%d",
+                        step, type(e).__name__, e, attempts, max_restarts)
+            # drain (not wait): a background save error here must not mask
+            # the failure being recovered from — log and restore anyway
+            bg = ckpt.drain()
+            if bg is not None:
+                log.warning("background checkpoint save failed (%s); "
+                            "restoring from the previous one", bg)
+            last = latest_step(loop.ckpt_dir)
+            if last is None:
+                raise
+            if backoff_s > 0:
+                time.sleep(min(backoff_s * 2 ** (attempts - 1), 30.0))
+            # restore into the live state's exact shardings — a bare
+            # device_put would land replicated, and the changed reduction
+            # orders drift the replayed trajectory off the fault-free one
+            state, _ = restore(loop.ckpt_dir, state, shardings=_shardings(state))
+            if comp is not None:
+                # error-feedback buffers are step-local state, not part of
+                # the checkpoint contract: restart them at zero
+                comp_err = comp.init(state.master)
+            # drop history rows past the restored step — the replayed steps
+            # re-append them; keeping both double-counts
+            history[:] = [h for h in history if h["step"] <= last]
+            if isinstance(e, _GuardRollback):
+                controller.record_rollback(step, last)
+            else:
+                reason = ("exclude" if isinstance(e, _MitigationRestart)
+                          else type(e).__name__)
+                controller.record_restart(step, last, reason)
+            log.info("restored checkpoint at step %d; resuming", last)
+            step = last
     if ckpt:
         ckpt.wait()
     return state, history

@@ -89,6 +89,7 @@ def make_train_step(
     collector: Collector = NULL_COLLECTOR,
     plan=None,
     mesh=None,
+    compressor=None,
 ) -> Callable:
     """Returns step(state, batch) -> (state, metrics); pure and jittable.
 
@@ -96,8 +97,20 @@ def make_train_step(
     ``pp > 1`` — ``mesh`` then must carry a ``"stage"`` axis of size ``pp``
     (default: the mesh installed via ``parallel.sharding.axis_rules``).  A
     ``pp == 1`` plan is plain gradient accumulation over ``plan.n_micro``.
+
+    ``compressor`` (a ``repro.ft.GradCompressor``) switches on int8
+    gradient sync with error feedback — the ft controller's soft mitigation
+    for a degraded DP link.  The step signature then threads the feedback
+    buffers: ``step(state, err, batch) -> (state, err, metrics)``;
+    ``TrainState`` (and so the checkpoint format) is unchanged.
     """
     if plan is not None and plan.pp > 1:
+        if compressor is not None:
+            raise ValueError(
+                "gradient compression targets the DP gradient sync; "
+                f"pp={plan.pp} pipeline steps have no DP all-reduce to "
+                "compress (dp>1 with pp>1 is not composed yet)"
+            )
         if grad_accum > 1:
             raise ValueError(
                 f"grad_accum={grad_accum} with pp={plan.pp}: microbatched "
@@ -152,16 +165,34 @@ def make_train_step(
 
     param_axes = model.param_axes(cfg)
 
-    def step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+    def apply_update(state, batch):
         loss, metrics, grads = compute_grads(state.params, batch)
         grads = shard_like_params(param_axes, grads)
         if grad_transform is not None:
             grads = grad_transform(grads)
+        return metrics, grads
+
+    def finish(state, metrics, grads):
         grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
         master, opt, stats = adamw_update(ocfg, grads, state.master, state.opt)
         params = jax.tree.map(lambda x: x.astype(cfg.compute_dtype), master)
         new_state = TrainState(params=params, master=master, opt=opt)
         return new_state, {**metrics, **stats}
+
+    if compressor is not None:
+        def step_c(state: TrainState, err: Any, batch: dict):
+            metrics, grads = apply_update(state, batch)
+            # quantize-dequantize before the (sharding-resolved) sync; the
+            # residual rides in the error-feedback buffers to the next step
+            grads, err = compressor.apply(grads, err)
+            new_state, out = finish(state, metrics, grads)
+            return new_state, err, out
+
+        return step_c
+
+    def step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        metrics, grads = apply_update(state, batch)
+        return finish(state, metrics, grads)
 
     return step
 
