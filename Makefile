@@ -1,11 +1,16 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test ci cli-smoke bench-serve bench-pp bench-obs bench-ft docs-check deps deps-dev
+.PHONY: test test-matrix ci cli-smoke bench-serve bench-pp bench-obs bench-ft docs-check deps deps-dev
 
 # tier-1 verification
 test:
 	python -m pytest -x -q
+
+# cross-axis parallelism parity matrix: (dp, tp, pp) x grad_accum x schedule
+# cells vs the fused single-device step on the forced-host mesh
+test-matrix:
+	python -m pytest -x -q tests/test_parallel_matrix.py
 
 # execute every fenced python block in docs/*.md (CPU-safe) so docs can't rot
 docs-check:
@@ -18,7 +23,7 @@ cli-smoke:
 	python -m repro serve --arch qwen2-0.5b --smoke --continuous \
 		--requests 8 --max-new 8 --rate 500
 
-ci: test docs-check cli-smoke bench-pp bench-obs bench-ft
+ci: test test-matrix docs-check cli-smoke bench-pp bench-obs bench-ft
 
 # decode-latency-vs-max_len sweep (paged vs gathered) + continuous-vs-static;
 # persists the perf trajectory to BENCH_serve.json

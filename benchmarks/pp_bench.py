@@ -10,7 +10,9 @@ Two layers of measurement, persisted to ``BENCH_pp.json``:
   through ``core.dpp.executor.pipeline_apply`` on a pp=2 host-device mesh,
   per-schedule forward-table bubble fraction, measured step wall time, and a
   hard parity gate: 3-step loss trajectory vs the non-pipelined reference
-  step to fp32 tolerance (1f1b + wave at minimum — the acceptance bar).
+  step to fp32 tolerance (1f1b + wave at minimum — the acceptance bar);
+* **composed** — dp x tp x pp points (``COMPOSED_POINTS``; dp=2,pp=2 at
+  minimum) on one ``(stage, data, model)`` mesh, same three measurements.
 
     PYTHONPATH=src python benchmarks/pp_bench.py --out BENCH_pp.json
     make bench-pp
@@ -40,6 +42,7 @@ from repro.core.simkit.workload import (
 from repro.data.pipeline import DataConfig, SyntheticTokens
 from repro.launch.mesh import make_pipeline_mesh
 from repro.parallel.plan import ParallelPlan, forward_order, resolve_plan
+from repro.parallel.sharding import DEFAULT_RULES, axis_rules
 from repro.train.optim import OptimizerConfig
 from repro.train.train_step import init_train_state, make_train_step
 
@@ -133,6 +136,66 @@ def executor_sweep(
     return results, parity
 
 
+# (dp, tp, pp) points for the composed-mesh sweep; dp=2,pp=2 is the
+# acceptance floor, the 2x2x2 point uses the full 8-device host fleet
+COMPOSED_POINTS = ((2, 1, 2), (1, 2, 2), (2, 2, 2))
+
+
+def composed_sweep(*, steps: int) -> dict:
+    """dp x tp x pp composition on one (stage, data, model) host mesh.
+
+    Same three measurements as the pp-only executor sweep — forward-table
+    bubble fraction, steady-state step wall time, and the hard parity gate
+    vs the fused single-device step — per composed point."""
+    ocfg = OptimizerConfig(lr=1e-3, warmup_steps=2, total_steps=steps)
+    data = DataConfig(vocab_size=TINY.vocab_size, seq_len=32, global_batch=8)
+    ds = SyntheticTokens(data)
+
+    def losses_of(step_fn, n=steps):
+        state = init_train_state(TINY, jax.random.PRNGKey(0))
+        fn = jax.jit(step_fn)
+        out, wall = [], []
+        for i in range(n):
+            batch = ds.batch_at(i)
+            jax.block_until_ready(batch["tokens"])
+            t0 = time.perf_counter()
+            state, m = fn(state, batch)
+            jax.block_until_ready(m["loss"])
+            wall.append(time.perf_counter() - t0)
+            out.append(float(m["loss"]))
+        return out, wall
+
+    ref_losses, _ = losses_of(make_train_step(TINY, ocfg))
+    out: dict[str, dict] = {}
+    for dp, tp, pp in COMPOSED_POINTS:
+        key = f"dp{dp}-tp{tp}-pp{pp}"
+        if dp * tp * pp > len(jax.devices()):
+            out[key] = {"skipped": f"needs {dp * tp * pp} devices"}
+            continue
+        plan = resolve_plan(ParallelPlan(dp=dp, tp=tp, pp=pp, n_micro=4 * dp))
+        table = build_time_table(
+            forward_order(plan), pp, plan.n_chunks, plan.n_micro_local
+        )
+        mesh = make_pipeline_mesh(pp, dp, tp)
+        with mesh, axis_rules(mesh, DEFAULT_RULES):
+            losses, wall = losses_of(
+                make_train_step(TINY, ocfg, plan=plan, mesh=mesh)
+            )
+        max_rel = max(
+            abs(a - b) / max(abs(b), 1e-9)
+            for a, b in zip(losses, ref_losses)
+        )
+        out[key] = {
+            "n_micro": plan.n_micro,
+            "n_micro_local": plan.n_micro_local,
+            "bubble_frac": round(bubble_fraction(table), 4),
+            "step_ms_min": round(min(wall[1:] or wall) * 1e3, 3),
+            "max_rel_err": max_rel,
+            "ok": bool(max_rel < 1e-4),
+        }
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--pp", type=int, default=2)
@@ -163,11 +226,26 @@ def main() -> None:
     for k, v in parity.items():
         print(f"  parity {k}: max_rel_err={v['max_rel_err']:.2e} "
               f"{'OK' if v['ok'] else 'FAIL'}")
+
+    composed = composed_sweep(steps=args.steps)
+    print("composed sweep (dp x tp x pp on one (stage, data, model) mesh):")
+    for key, v in composed.items():
+        if "skipped" in v:
+            print(f"  {key}: skipped ({v['skipped']})")
+            continue
+        print(f"  {key}: bubble={v['bubble_frac']:.3f} "
+              f"step={v['step_ms_min']:.2f}ms "
+              f"parity={v['max_rel_err']:.2e} "
+              f"{'OK' if v['ok'] else 'FAIL'}")
+        if not v["ok"]:
+            bad[key] = v
+
     results = {
         "pp": args.pp,
         "n_chunks": args.n_chunks,
         "sim": sim,
         "executor": execu,
+        "composed": composed,
         "parity": {k: v for k, v in sorted(parity.items())},
         "backend": jax.default_backend(),
     }

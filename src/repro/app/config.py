@@ -51,14 +51,19 @@ class ParallelSection:
     (``1f1b``/``dfc``/``bfc``/``wave``) and ``wave=0`` with ``schedule=wave``
     lets the MegaDPP planner choose the wave width under ``dpp.memory_cap_gib``.
     ``fbd_backward`` attaches MegaFBD's decoupled backward as the gradient
-    path.  ``dp``/``tp`` > 1 combined with ``pp`` > 1 raises for now (the
-    pipelined step would silently replicate compute over those axes).
+    path.  ``dp``/``tp`` compose with ``pp`` on the one mesh: ``dp > 1``
+    shards the ``n_micro`` microbatches across dp groups (``n_micro % dp``
+    must be 0) with the gradient sync riding the pipelined backward's
+    data-axis all-reduce, and ``tp > 1`` slices heads/kv-heads/ffn inside
+    every stage's body (dense GQA families; each must divide by ``tp``).
+    ``train.grad_accum > 1`` stacks macrobatch accumulation on top — each
+    accumulation is one full pipeline pass.
     """
 
     dp: int = 1
     tp: int = 1
     pp: int = 1
-    n_micro: int = 0               # 0 -> 2*pp when pp>1
+    n_micro: int = 0               # 0 -> 2*pp*dp when pp>1
     n_chunks: int = 1
     schedule: str = "1f1b"         # 1f1b | dfc | bfc | wave
     wave: int = 0                  # 0 = planner chooses (schedule=wave)

@@ -83,7 +83,8 @@ class ScanPlugin(ModulePlugin):
     Two online extensions ride the same plugin:
 
     * ``--detect-online`` runs an :class:`repro.obs.OnlineDetector` over the
-      step event stream (topology from the ``obs`` section); verdict deltas
+      step event stream (topology from the composed ``ParallelPlan`` when
+      one resolves, else the ``obs`` section); verdict deltas
       are stamped into the trace as ``diagnosis`` instant events and the
       last diagnosis lands in the ``scan.online`` report;
     * a ``--trace-out`` path additionally streams every event through an
@@ -105,9 +106,17 @@ class ScanPlugin(ModulePlugin):
             from repro.core.simkit.workload import Topology
             from repro.obs import OnlineDetector
 
+            # a composed ParallelPlan wins over the obs section's synthetic
+            # dims: detector rank coordinates must match the mesh actually
+            # training or the ft mitigation routes links to the wrong axis
+            plan = session.parallel_plan()
             o = self.run_cfg.obs
+            topo = (
+                plan.topology() if plan is not None
+                else Topology(dp=o.dp, pp=o.pp, tp=o.tp)
+            )
             self._detector = OnlineDetector(
-                Topology(dp=o.dp, pp=o.pp, tp=o.tp),
+                topo,
                 every=sc.detect_every, window=sc.detect_window,
                 align=sc.detect_align,
                 thresholds=dict(

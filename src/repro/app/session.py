@@ -191,9 +191,14 @@ class Session:
             self.finalize()
 
     # -------------------------------------------------------------- train
-    def _rank_event_spec(self):
+    def _rank_event_spec(self, plan=None):
         """Resolve the ``obs`` section into a per-rank event synthesis spec
-        (``None`` unless rank events or straggler induction are asked for)."""
+        (``None`` unless rank events or straggler induction are asked for).
+
+        With a composed ``ParallelPlan`` the synthesized topology follows the
+        plan's real (dp, pp, tp) — so detector rank coordinates and the ft
+        mitigation's link-axis routing agree with the mesh actually training
+        — and the ``obs`` section's dims only apply to plan-less runs."""
         o = self.run_cfg.obs
         ch = self.run_cfg.ft.chaos
         chaos_needs = self.ft_controller is not None and (
@@ -203,8 +208,12 @@ class Session:
             return None
         from repro.obs import RankEventSpec
 
+        dims = (
+            {"dp": plan.dp, "pp": plan.pp, "tp": plan.tp}
+            if plan is not None else {"dp": o.dp, "pp": o.pp, "tp": o.tp}
+        )
         return RankEventSpec(
-            dp=o.dp, pp=o.pp, tp=o.tp,
+            **dims,
             slow_rank=o.slow_rank, slow_factor=o.slow_factor,
         )
 
@@ -271,9 +280,20 @@ class Session:
             from repro.launch.mesh import make_pipeline_mesh
             from repro.parallel.plan import plan_summary
 
-            if batch % plan.n_micro != 0:
+            # per-axis divisibility: the batch first splits into grad_accum
+            # macrobatches, each macrobatch into n_micro microbatches, and
+            # the microbatch axis shards across dp groups (n_micro % dp is
+            # plan.validate()'s job)
+            ga = max(1, loop.grad_accum)
+            if batch % ga != 0:
                 raise ValueError(
                     f"global batch {batch} not divisible by "
+                    f"train.grad_accum={ga}"
+                )
+            if (batch // ga) % plan.n_micro != 0:
+                raise ValueError(
+                    f"per-accumulation batch {batch // ga} (global {batch} "
+                    f"/ grad_accum {ga}) not divisible by "
                     f"parallel.n_micro={plan.n_micro}"
                 )
             mesh = make_pipeline_mesh(plan.pp, plan.dp, plan.tp)
@@ -289,7 +309,8 @@ class Session:
                 cfg, ocfg, data, loop,
                 collector=self.collector, tracer=self.tracer,
                 hooks=self.step_hooks(), plan=plan,
-                registry=self.metrics_registry, obs=self._rank_event_spec(),
+                registry=self.metrics_registry,
+                obs=self._rank_event_spec(plan),
                 controller=self.ft_controller,
             )
         self.results["history"] = history

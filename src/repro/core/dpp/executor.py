@@ -150,22 +150,45 @@ def pipeline_apply(
     mesh: jax.sharding.Mesh,
     axis: str = "stage",
     block_fn: Callable[[Any, jax.Array], jax.Array],
+    data_axis: str | None = None,
+    param_specs: Any | None = None,
 ) -> jax.Array:
     """Runs the pipelined forward; returns [n_micro, ...] final activations
     (replicated).  Differentiable — backward pipelines automatically.
 
     ``params`` leaves are split over the ``axis`` mesh dimension (stage-major
-    leading axis); every other mesh axis sees them replicated.  ``block_fn``
+    leading axis); every other mesh axis sees them replicated unless
+    ``param_specs`` (a matching pytree of ``PartitionSpec``, each starting
+    with ``axis``) additionally slices weight dims over e.g. the tensor
+    axis — the per-leaf tp sharding of ``models.pipeline``.  ``block_fn``
     receives one cell's params (leaves indexed down to ``[...]``, the chunk
     axis consumed) and one microbatch activation of shape ``x_micro.shape[1:]``.
+
+    ``data_axis`` composes data parallelism: the leading microbatch axis of
+    ``x_micro`` shards across that mesh axis, each dp group pipelines its
+    local slice (``table`` must then be built for the *local* microbatch
+    count), and the output keeps the same sharding.  The backward pass
+    all-reduces parameter cotangents over the data axis for free: everything
+    runs manual under ``shard_map``, and the transpose of a replicated-input
+    broadcast is a psum over the mesh axes its spec does not mention.
     """
     S = mesh.shape[axis]
-    n_micro = x_micro.shape[0]
     rest = x_micro.shape[1:]
+    n_local = x_micro.shape[0]
+    if data_axis is not None:
+        dp = mesh.shape[data_axis]
+        if n_local % dp != 0:
+            raise ValueError(
+                f"n_micro={n_local} not divisible by mesh axis "
+                f"{data_axis!r} of size {dp}"
+            )
+        n_local //= dp
+    n_micro = n_local
     C = jax.tree.leaves(params)[0].shape[1]
 
     def body(params_loc, x_loc):
-        # params_loc leaves [1, C, ...] (this stage's chunks); x_loc replicated
+        # params_loc leaves [1, C, ...] (this stage's chunks); x_loc holds
+        # this dp group's microbatches (all of them when data_axis is None)
         params_loc = jax.tree.map(lambda a: a[0], params_loc)
         sid = jax.lax.axis_index(axis)
 
@@ -206,10 +229,13 @@ def pipeline_apply(
         out = jnp.where(sid == 0, out, jnp.zeros_like(out))
         return jax.lax.psum(out, axis)
 
+    x_spec = P() if data_axis is None else P(data_axis)
+    if param_specs is None:
+        param_specs = P(axis)  # broadcast: every leaf stage-sharded only
     fn = _shard_map(
         body, mesh=mesh,
-        in_specs=(P(axis), P()),
-        out_specs=P(),
+        in_specs=(param_specs, x_spec),
+        out_specs=x_spec,
         **_SHARD_MAP_KW,
     )
     return fn(params, x_micro)

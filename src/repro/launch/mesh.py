@@ -37,13 +37,17 @@ def make_host_mesh(data: int = 4, model: int = 2) -> jax.sharding.Mesh:
 
 
 def make_pipeline_mesh(pp: int, dp: int = 1, tp: int = 1) -> jax.sharding.Mesh:
-    """(stage, data, model) mesh for pipeline-parallel training.
+    """(stage, data, model) mesh for (composed) pipeline-parallel training.
 
     Uses the first ``pp*dp*tp`` local devices, so a pp=2 smoke run works on
-    the 8-device forced-host CPU fleet without consuming all of it.  The
-    ``stage`` axis feeds ``core.dpp.executor.pipeline_apply``; ``data`` /
-    ``model`` keep their usual logical-axis rule meanings outside the
-    pipelined section.
+    the 8-device forced-host CPU fleet without consuming all of it.  All
+    three axes are live inside ``core.dpp.executor.pipeline_apply``'s
+    ``shard_map``: ``stage`` carries the ring ppermute, ``data`` shards the
+    microbatch axis (one pipeline per dp group; parameter cotangents
+    all-reduce over it in backward), and ``model`` slices heads/ffn inside
+    each stage's block when the plan's tp > 1.  Outside the pipelined
+    section ``data`` / ``model`` keep their usual logical-axis rule
+    meanings.
     """
     need = pp * dp * tp
     devs = jax.devices()

@@ -50,9 +50,12 @@ class PipelineLayout:
     pp: int                    # pipeline stages
     n_chunks: int              # virtual chunks per stage (interleaving)
     groups_per_cell: int       # consecutive groups one (stage, chunk) holds
+    tp: int = 1                # tensor degree inside each stage's body
 
 
-def pipeline_layout(cfg: ModelConfig, pp: int, n_chunks: int = 1) -> PipelineLayout:
+def pipeline_layout(
+    cfg: ModelConfig, pp: int, n_chunks: int = 1, tp: int = 1
+) -> PipelineLayout:
     """Derive (and validate) the stage/chunk split of ``cfg``'s layer stack."""
     if cfg.family == "moe":
         raise ValueError(
@@ -77,8 +80,30 @@ def pipeline_layout(cfg: ModelConfig, pp: int, n_chunks: int = 1) -> PipelineLay
             f"{cfg.name}: {n_groups} layer group(s) not divisible by "
             f"pp*n_chunks = {pp}*{n_chunks} = {cells}"
         )
+    if tp > 1:
+        _validate_tp(cfg, tp)
     return PipelineLayout("seg0", tuple(kinds), n_groups, pp, n_chunks,
-                          n_groups // cells)
+                          n_groups // cells, tp)
+
+
+def _validate_tp(cfg: ModelConfig, tp: int) -> None:
+    """tp>1 inside the pipeline is the Megatron split of dense GQA blocks:
+    heads / kv-heads / ffn width slice across the ``model`` axis, with an
+    explicit psum after the attention-out and mlp-down projections."""
+    segs = lm.segment_layout(cfg)
+    kinds = set(segs[0][0]) if len(segs) == 1 else {k for ks, _ in segs for k in ks}
+    if kinds != {"dense"} or cfg.use_mla:
+        raise ValueError(
+            f"{cfg.name}: tp={tp} inside the pipeline supports dense GQA "
+            f"blocks only (got kinds {sorted(kinds)}"
+            f"{', mla' if cfg.use_mla else ''})"
+        )
+    H, K, F = cfg.num_heads, cfg.num_kv_heads, cfg.d_ff
+    if H % tp or K % tp or F % tp:
+        raise ValueError(
+            f"{cfg.name}: heads={H}/kv_heads={K}/d_ff={F} must all divide "
+            f"by tp={tp} for the in-stage tensor split"
+        )
 
 
 def restack_params(seg_params: Any, layout: PipelineLayout) -> Any:
@@ -97,6 +122,48 @@ def restack_params(seg_params: Any, layout: PipelineLayout) -> Any:
     return jax.tree.map(one, seg_params)
 
 
+# weight logical axes the in-stage tensor split slices over the model axis
+_TP_SLICED = ("heads_w", "kv_heads_w", "mlp_w")
+
+
+def pipeline_param_specs(cfg: ModelConfig, layout: PipelineLayout) -> Any:
+    """Per-leaf ``PartitionSpec`` pytree for the restacked segment params.
+
+    Every leaf leads with the stage axis over its ``[S, C, g, ...]`` stacking;
+    with ``layout.tp > 1`` the Megatron-sliced weight dims (heads / kv-heads /
+    ffn width) additionally shard over ``model``.  Norm scales and biases on
+    replicated dims carry no model-axis entry: their in_spec not mentioning
+    ``model`` is exactly what makes ``shard_map``'s transpose psum their
+    cotangents across the tensor ranks.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    axes = lm.param_axes(cfg)[layout.seg_key]
+
+    def one(t):
+        rest = t[1:]  # drop the "layers" axis: restacked to [S, C, g]
+        parts = [
+            "model" if (layout.tp > 1 and a in _TP_SLICED) else None
+            for a in rest
+        ]
+        return P("stage", None, None, *parts)
+
+    is_axes = lambda t: isinstance(t, tuple) and all(
+        isinstance(a, (str, type(None))) for a in t
+    )
+    return jax.tree.map(one, axes, is_leaf=is_axes)
+
+
+def _tp_local_cfg(cfg: ModelConfig, tp: int) -> ModelConfig:
+    """The per-tensor-rank view of a dense config: H/K/F divided by tp (the
+    grouping ratio G = H/K is preserved, so GQA head-grouping is unchanged)."""
+    return cfg.replace(
+        num_heads=cfg.num_heads // tp,
+        num_kv_heads=cfg.num_kv_heads // tp,
+        d_ff=cfg.d_ff // tp,
+    )
+
+
 def make_block_fn(
     cfg: ModelConfig,
     layout: PipelineLayout,
@@ -109,23 +176,51 @@ def make_block_fn(
     in ``axis_rules(None)`` (``pipeline_loss`` does).  MegaScope collectors
     are not threaded into pipelined blocks: captures cannot ride the
     activation wire, so probes observe only the embed/head ends.
-    """
 
-    def apply_group(gp: dict, x: jax.Array) -> jax.Array:
-        positions = jnp.arange(x.shape[1])
-        for j, kind in enumerate(layout.kinds):
-            x, _, aux = lm._block_apply(
-                gp[f"b{j}"], cfg, kind, x,
-                positions=positions, cache=None, cache_pos=None,
-                mrope_position_ids=None, paged=None,
+    With ``layout.tp > 1`` each block runs the Megatron tensor split: the
+    cell's weights arrive pre-sliced by the executor's param in_specs
+    (``pipeline_param_specs``), the attention/mlp submodules run on the local
+    head/ffn shard via a narrowed config, and an explicit
+    ``psum`` over the ``model`` axis after the attention-out and mlp-down
+    projections restores the replicated residual stream.
+    """
+    if layout.tp > 1:
+        cfg_local = _tp_local_cfg(cfg, layout.tp)
+
+        def apply_block(bp: dict, x: jax.Array, positions: jax.Array) -> jax.Array:
+            h = L.norm_apply(bp["ln1"], x, cfg.norm_kind, cfg.norm_eps)
+            a, _ = L.gqa_apply(
+                bp["attn"], cfg_local, h, positions=positions, cache=None,
+                cache_pos=None, mrope_position_ids=None, paged=None,
                 collector=NULL_COLLECTOR,
             )
-            if aux:
-                raise ValueError(
-                    f"block kind {kind!r} produced aux outputs; "
-                    "not supported on the pipeline path"
+            x = lm._resid(cfg, x, jax.lax.psum(a, "model"))
+            h = L.norm_apply(bp["ln2"], x, cfg.norm_kind, cfg.norm_eps)
+            f = L.mlp_apply(bp["mlp"], cfg_local, h, NULL_COLLECTOR)
+            return lm._resid(cfg, x, jax.lax.psum(f, "model"))
+
+        def apply_group(gp: dict, x: jax.Array) -> jax.Array:
+            positions = jnp.arange(x.shape[1])
+            for j, _ in enumerate(layout.kinds):
+                x = apply_block(gp[f"b{j}"], x, positions)
+            return x
+
+    else:
+        def apply_group(gp: dict, x: jax.Array) -> jax.Array:
+            positions = jnp.arange(x.shape[1])
+            for j, kind in enumerate(layout.kinds):
+                x, _, aux = lm._block_apply(
+                    gp[f"b{j}"], cfg, kind, x,
+                    positions=positions, cache=None, cache_pos=None,
+                    mrope_position_ids=None, paged=None,
+                    collector=NULL_COLLECTOR,
                 )
-        return x
+                if aux:
+                    raise ValueError(
+                        f"block kind {kind!r} produced aux outputs; "
+                        "not supported on the pipeline path"
+                    )
+            return x
 
     group = apply_group
     if cfg.remat != "none":
@@ -158,11 +253,21 @@ def pipeline_forward(
     table: TimeTable,
     mesh: jax.sharding.Mesh,
     block_fn: Callable | None = None,
+    dp: int = 1,
 ) -> jax.Array:
-    """Pipelined block stack on real weights: returns [n_micro, mb, S, D]."""
+    """Pipelined block stack on real weights: returns [n_micro, mb, S, D].
+
+    ``dp > 1`` shards the microbatch axis over the mesh's ``data`` axis (the
+    ``table`` must then be built for ``n_micro // dp`` local microbatches);
+    ``layout.tp > 1`` slices weights over ``model`` via per-leaf in_specs.
+    """
     block_fn = block_fn or make_block_fn(cfg, layout)
     stacked = restack_params(params[layout.seg_key], layout)
-    return pipeline_apply(stacked, x_micro, table, mesh=mesh, block_fn=block_fn)
+    return pipeline_apply(
+        stacked, x_micro, table, mesh=mesh, block_fn=block_fn,
+        data_axis="data" if dp > 1 else None,
+        param_specs=pipeline_param_specs(cfg, layout) if layout.tp > 1 else None,
+    )
 
 
 def pipeline_loss(
@@ -175,15 +280,18 @@ def pipeline_loss(
     mesh: jax.sharding.Mesh,
     n_micro: int,
     block_fn: Callable | None = None,
+    dp: int = 1,
 ) -> tuple[jax.Array, dict]:
     """Full pipelined training loss; same contract as ``lm.loss_fn``.
 
     Embedding and the norm/cross-entropy head run replicated outside the
     pipeline (they are cheap at repro scale); the block stack — where the
     FLOPs live — runs through the schedule-controlled executor.  The global
-    batch splits into ``n_micro`` equal microbatches along the batch axis;
-    with equal per-microbatch token counts the global-mean cross-entropy here
-    equals the reference step's mean of per-microbatch means.
+    batch splits into ``n_micro`` equal microbatches along the batch axis
+    (``n_micro`` is the *global* count; with ``dp > 1`` each dp group
+    pipelines a contiguous ``n_micro // dp`` slice); with equal
+    per-microbatch token counts the global-mean cross-entropy here equals
+    the reference step's mean of per-microbatch means.
     """
     block_fn = block_fn or make_block_fn(cfg, layout)
     # the pipeline body is per-device code under shard_map: logical-axis
@@ -199,7 +307,7 @@ def pipeline_loss(
         x_micro = x.reshape(n_micro, mb, S, D)
         hidden = pipeline_forward(
             cfg, params, x_micro,
-            layout=layout, table=table, mesh=mesh, block_fn=block_fn,
+            layout=layout, table=table, mesh=mesh, block_fn=block_fn, dp=dp,
         )
         hidden = hidden.reshape(B, S, D)
         hidden = L.norm_apply(

@@ -2,8 +2,12 @@
 
 One frozen dataclass describes how a training run parallelizes:
 
-* ``dp`` / ``tp`` — the data / tensor degrees the logical-axis sharding rules
-  resolve against (``parallel.sharding``);
+* ``dp`` / ``tp`` — the data / tensor degrees.  At ``pp == 1`` the
+  logical-axis sharding rules resolve against them (``parallel.sharding``);
+  at ``pp > 1`` they compose on the one ``(stage, data, model)`` mesh: the
+  ``n_micro`` microbatches shard across dp groups (each group pipelines its
+  ``n_micro_local`` slice) and tp slices heads/ffn inside every stage's
+  ``shard_map`` body (``models.pipeline``);
 * ``pp`` / ``n_micro`` / ``n_chunks`` / ``schedule`` / ``wave`` — the MegaDPP
   pipeline axis: how many stages, how the (microbatch, chunk) task matrix is
   traversed (``core.dpp.schedule``), and the wave width when the traversal is
@@ -48,6 +52,21 @@ class ParallelPlan:
     def world(self) -> int:
         return self.dp * self.tp * self.pp
 
+    @property
+    def n_micro_local(self) -> int:
+        """Microbatches one dp group pipelines: the ``n_micro`` global
+        microbatches shard evenly across the ``data`` axis, and each dp group
+        runs its own copy of the schedule over its slice."""
+        return self.n_micro // self.dp if self.n_micro else self.n_micro
+
+    def topology(self):
+        """The rank <-> (dp, stage, tp) coordinate mapping of the composed
+        mesh (``core.simkit.workload.Topology``) — what the ft/obs paths use
+        to decide which axis a detected link or straggler lives on."""
+        from repro.core.simkit.workload import Topology
+
+        return Topology(dp=self.dp, pp=self.pp, tp=self.tp)
+
     def validate(self) -> "ParallelPlan":
         if min(self.dp, self.tp, self.pp) < 1:
             raise ValueError(f"parallel degrees must be >= 1, got {self}")
@@ -58,16 +77,10 @@ class ParallelPlan:
             )
         if self.pp > 1 and self.n_micro < 0:
             raise ValueError(f"n_micro must be >= 0, got {self.n_micro}")
-        if self.pp > 1 and (self.dp > 1 or self.tp > 1):
-            # honest failure beats silent replication: the pipelined loss
-            # runs under axis_rules(None) with only the stage axis
-            # partitioned, so dp/tp degrees would burn devices computing
-            # identical replicas while reporting themselves as parallelism
+        if self.pp > 1 and self.n_micro and self.n_micro % self.dp != 0:
             raise ValueError(
-                f"dp={self.dp}/tp={self.tp} with pp={self.pp} is not "
-                "supported yet: the pipelined step would replicate compute "
-                "over the data/model axes (no speedup); use dp=tp=1 with "
-                "pp>1, or pp=1 for the sharded DP/TP path"
+                f"n_micro={self.n_micro} not divisible by dp={self.dp}: "
+                "the microbatch axis shards evenly across dp groups"
             )
         return self
 
@@ -89,15 +102,17 @@ def resolve_plan(
     if plan.pp <= 1:
         return plan
     if plan.n_micro == 0:
-        plan = replace(plan, n_micro=2 * plan.pp)
+        # 2 microbatches per stage *per dp group* keeps the per-group
+        # pipeline depth (and so the bubble fraction) independent of dp
+        plan = replace(plan, n_micro=2 * plan.pp * plan.dp)
     if plan.schedule == "wave" and plan.wave == 0:
         from repro.core.dpp.planner import Planner
-        from repro.core.simkit.workload import ModelProfile, Topology
+        from repro.core.simkit.workload import ModelProfile
 
         planner = Planner(
-            Topology(dp=plan.dp, pp=plan.pp, tp=plan.tp),
+            plan.topology(),
             prof or ModelProfile(n_chunks=plan.n_chunks),
-            n_micro=plan.n_micro,
+            n_micro=plan.n_micro_local,
             memory_cap=int(memory_cap_gib * (1 << 30)),
         )
         plan = replace(plan, wave=planner.plan().wave)
@@ -107,8 +122,10 @@ def resolve_plan(
 def forward_order(plan: ParallelPlan) -> list[Step]:
     """The desired (microbatch, chunk) visit order the executor's time table
     legalizes.  Only the F steps matter to the forward table; the backward
-    traversal is autodiff's mirror."""
-    nm, c = plan.n_micro, plan.n_chunks
+    traversal is autodiff's mirror.  Microbatch indices are *dp-local*: each
+    dp group runs the same table over its ``n_micro_local`` slice of the
+    globally-sharded microbatch axis."""
+    nm, c = plan.n_micro_local, plan.n_chunks
     if plan.schedule == "dfc":
         return sched_dfc(nm, c)
     if plan.schedule == "bfc":
@@ -120,11 +137,37 @@ def forward_order(plan: ParallelPlan) -> list[Step]:
     raise ValueError(f"unknown pipeline schedule {plan.schedule!r}")
 
 
+def link_axis(plan: ParallelPlan, link) -> str:
+    """Which mesh axis a (rank, rank) link lives on: ``"data"`` / ``"stage"``
+    / ``"model"`` for links whose endpoints differ in exactly one coordinate
+    of the plan topology, ``"self"`` for a degenerate same-rank link,
+    ``"mixed"`` for diagonal pairs, ``"unknown"`` for out-of-range ranks.
+
+    This is how the ft mitigation picks its lever: data-axis links carry the
+    gradient sync (compressible), stage-axis links carry pipeline P2P
+    activations (replannable), model-axis links carry in-stage tensor
+    collectives (neither — only exclusion helps).
+    """
+    topo = plan.topology()
+    a, b = link
+    if not (0 <= a < topo.world and 0 <= b < topo.world):
+        return "unknown"
+    ca, cb = topo.coords(a), topo.coords(b)
+    diffs = [
+        name for name, x, y in zip(("data", "stage", "model"), ca, cb)
+        if x != y
+    ]
+    if not diffs:
+        return "self"
+    return diffs[0] if len(diffs) == 1 else "mixed"
+
+
 def plan_summary(plan: ParallelPlan) -> dict:
     """JSON-able view for ``session.results`` / bench output."""
     return {
         "dp": plan.dp, "tp": plan.tp, "pp": plan.pp,
-        "n_micro": plan.n_micro, "n_chunks": plan.n_chunks,
+        "n_micro": plan.n_micro, "n_micro_local": plan.n_micro_local,
+        "n_chunks": plan.n_chunks,
         "schedule": plan.schedule, "wave": plan.wave,
-        "fbd_backward": plan.fbd_backward,
+        "fbd_backward": plan.fbd_backward, "world": plan.world,
     }

@@ -101,6 +101,26 @@ def _shardings(state):
     return jax.tree.map(lambda x: getattr(x, "sharding", None), state)
 
 
+def _route_links(plan, links) -> tuple[list, list]:
+    """Split detected degraded links by the mesh axis they live on.
+
+    Pure-DP runs (no plan) treat every link as a data link — the old
+    behavior.  Composed plans map both endpoints through the plan topology
+    (rank -> (dp, stage, tp) coordinates): links crossing the data axis are
+    gradient-sync links (compressible), links crossing the stage axis are
+    pipeline P2P links (replannable); anything else — tp links, diagonal
+    pairs, out-of-range ranks — mitigates as neither.
+    """
+    links = [tuple(l) for l in (links or [])]
+    if plan is None:
+        return links, []
+    from repro.parallel.plan import link_axis
+
+    data = [l for l in links if link_axis(plan, l) == "data"]
+    stage = [l for l in links if link_axis(plan, l) == "stage"]
+    return data, stage
+
+
 _MEM_STATS_SUPPORTED: bool | None = None  # probed once; CPU returns None
 
 
@@ -258,11 +278,16 @@ def train(
                             )
                         log.warning("ft: excluding %s without restart "
                                     "(no ckpt_dir)", sorted(act.slow_ranks))
-                    elif act.degraded_links and comp is None and (
-                        plan is None or plan.pp <= 1
+                    elif (data_stage := _route_links(plan, act.degraded_links))[0] \
+                            and comp is None and (
+                                plan is None or plan.pp <= 1 or plan.dp > 1
                     ):
+                        # a data-axis link has a gradient sync to compress —
+                        # either the pure DP/TP path, or a composed plan with
+                        # dp>1 (the pipelined backward's data-axis all-reduce)
                         from repro.ft.compress import GradCompressor
 
+                        data_links = data_stage[0]
                         comp = GradCompressor()
                         comp_err = comp.init(state.master)
                         comp_wire = comp.wire_bytes(state.master)
@@ -270,7 +295,7 @@ def train(
                         controller.replans += 1
                         controller.compression_on = True
                         controller.record(step, "mitigate:compress_on", {
-                            "links": [list(l) for l in act.degraded_links],
+                            "links": [list(l) for l in data_links],
                             "detect_step": act.detect_step,
                             "wire_bytes_per_sync": comp_wire[0],
                             "baseline_bytes_per_sync": comp_wire[1],
@@ -279,26 +304,26 @@ def train(
                             "ft: int8 gradient sync ON (%.2fx wire bytes) "
                             "for degraded links %s",
                             comp_wire[0] / max(comp_wire[1], 1),
-                            [list(l) for l in act.degraded_links],
+                            [list(l) for l in data_links],
                         )
-                    elif act.slow_ranks and plan is not None and plan.pp > 1:
+                    elif (act.slow_ranks or data_stage[1]) \
+                            and plan is not None and plan.pp > 1:
+                        # slow ranks or degraded stage-axis P2P links: route
+                        # around them with a MegaDPP wave re-plan
                         from dataclasses import replace as _dc_replace
                         from types import SimpleNamespace
 
                         from repro.core.dpp.planner import Planner
-                        from repro.core.simkit.workload import (
-                            ModelProfile,
-                            Topology,
-                        )
+                        from repro.core.simkit.workload import ModelProfile
 
                         planner = Planner(
-                            Topology(dp=plan.dp, pp=plan.pp, tp=plan.tp),
+                            plan.topology(),
                             ModelProfile(n_chunks=plan.n_chunks),
-                            n_micro=plan.n_micro,
+                            n_micro=plan.n_micro_local,
                         )
                         res = planner.replan(SimpleNamespace(
                             slow_ranks=list(act.slow_ranks),
-                            degraded_links=[tuple(l) for l in act.degraded_links],
+                            degraded_links=data_stage[1],
                         ))
                         plan = _dc_replace(plan, schedule="wave", wave=res.wave)
                         step_fn, jit_step, pp_info = build(plan)

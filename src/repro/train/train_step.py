@@ -105,21 +105,16 @@ def make_train_step(
     ``TrainState`` (and so the checkpoint format) is unchanged.
     """
     if plan is not None and plan.pp > 1:
-        if compressor is not None:
+        if compressor is not None and plan.dp <= 1:
             raise ValueError(
-                "gradient compression targets the DP gradient sync; "
-                f"pp={plan.pp} pipeline steps have no DP all-reduce to "
-                "compress (dp>1 with pp>1 is not composed yet)"
-            )
-        if grad_accum > 1:
-            raise ValueError(
-                f"grad_accum={grad_accum} with pp={plan.pp}: microbatched "
-                "grad-accum *is* the pipeline traversal — set "
-                "parallel.n_micro instead"
+                "gradient compression targets the DP gradient sync; a "
+                f"pp={plan.pp} plan with dp=1 has no data axis to compress "
+                "over — set parallel.dp > 1 to compose them"
             )
         return _make_pipeline_train_step(
-            cfg, ocfg, plan, mesh=mesh,
+            cfg, ocfg, plan, mesh=mesh, grad_accum=grad_accum,
             grad_transform=grad_transform, collector=collector,
+            compressor=compressor,
         )
     if plan is not None:
         grad_accum = max(grad_accum, plan.n_micro)
@@ -203,8 +198,10 @@ def _make_pipeline_train_step(
     plan,
     *,
     mesh=None,
+    grad_accum: int = 1,
     grad_transform: Callable[[Any], Any] | None = None,
     collector: Collector = NULL_COLLECTOR,
+    compressor=None,
 ) -> Callable:
     """The pp>1 train step: block stack through the MegaDPP pipeline executor.
 
@@ -212,23 +209,34 @@ def _make_pipeline_train_step(
     restack to ``[stage, chunk, ...]`` happens inside the loss — so the
     optimizer update, checkpoint format, and sharding constraints are
     unchanged from the fused path.
+
+    Composition: ``plan.dp`` shards the microbatch axis over the mesh's
+    ``data`` axis (each dp group pipelines ``plan.n_micro_local``
+    microbatches; parameter cotangents all-reduce over ``data`` through the
+    ``shard_map`` transpose), ``plan.tp`` slices heads/ffn over ``model``
+    inside every stage's body, and ``grad_accum > 1`` runs that many *full
+    pipeline passes* back-to-back, averaging their gradients — macrobatch
+    accumulation on top of (not instead of) the microbatched traversal.
     """
     from repro.core.dpp.executor import build_time_table
     from repro.models import pipeline as pl
     from repro.parallel.plan import forward_order
+    from repro.parallel.sharding import axis_rules
 
     if mesh is None:
         mesh = current_mesh_and_rules()[0]
-    if mesh is None or mesh.shape.get("stage") != plan.pp:
+    want = {"stage": plan.pp, "data": plan.dp, "model": plan.tp}
+    have = dict(mesh.shape) if mesh is not None else {}
+    if mesh is None or any(have.get(ax, 1) != n for ax, n in want.items()):
         raise ValueError(
-            f"pipeline train step (pp={plan.pp}) needs a mesh with a 'stage' "
-            f"axis of size {plan.pp}; got "
-            f"{dict(mesh.shape) if mesh is not None else None} — build one "
-            "with repro.launch.mesh.make_pipeline_mesh(pp, dp, tp)"
+            f"pipeline train step (pp={plan.pp}, dp={plan.dp}, "
+            f"tp={plan.tp}) needs a mesh shaped {want}; got "
+            f"{have or None} — build one with "
+            "repro.launch.mesh.make_pipeline_mesh(pp, dp, tp)"
         )
-    layout = pl.pipeline_layout(cfg, plan.pp, plan.n_chunks)
+    layout = pl.pipeline_layout(cfg, plan.pp, plan.n_chunks, tp=plan.tp)
     table = build_time_table(
-        forward_order(plan), plan.pp, plan.n_chunks, plan.n_micro
+        forward_order(plan), plan.pp, plan.n_chunks, plan.n_micro_local
     )
     block_fn = pl.make_block_fn(cfg, layout)
     model = get_model(cfg)
@@ -245,11 +253,11 @@ def _make_pipeline_train_step(
         return pl.pipeline_loss(
             cfg, params, batch,
             layout=layout, table=table, mesh=mesh,
-            n_micro=plan.n_micro, block_fn=block_fn,
+            n_micro=plan.n_micro, block_fn=block_fn, dp=plan.dp,
         )
 
     if plan.fbd_backward:
-        def compute_grads(params, batch):
+        def grads_once(params, batch):
             # MegaFBD attach: the forward instance records residuals; the
             # transpose is hoisted into a pure, separately-invokable function
             # (closure_convert), its residual arguments being exactly the
@@ -265,20 +273,77 @@ def _make_pipeline_train_step(
     else:
         grad_fn = jax.value_and_grad(loss_of, has_aux=True)
 
-        def compute_grads(params, batch):
+        def grads_once(params, batch):
             (loss, metrics), grads = grad_fn(params, batch)
             return loss, metrics, grads
 
-    def step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
-        loss, metrics, grads = compute_grads(state.params, batch)
+    if grad_accum <= 1:
+        compute_grads = grads_once
+    else:
+        def compute_grads(params, batch):
+            # macrobatch accumulation over full pipeline passes: each scan
+            # iteration is one complete microbatched traversal
+            B = batch["targets"].shape[0]
+            mb = B // grad_accum
+            split = jax.tree.map(
+                lambda x: x.reshape(grad_accum, mb, *x.shape[1:])
+                if hasattr(x, "shape") and x.shape[:1] == (B,)
+                else x,
+                batch,
+            )
+
+            def body(carry, macro):
+                acc, loss_acc = carry
+                loss, metrics, grads = grads_once(params, macro)
+                acc = jax.tree.map(jnp.add, acc, grads)
+                return (acc, loss_acc + loss), metrics
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss_sum), metrics = jax.lax.scan(
+                body, (zero, jnp.zeros(())), split
+            )
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            metrics = jax.tree.map(lambda x: x[-1], metrics)
+            return loss_sum / grad_accum, metrics, grads
+
+    def apply_update(state, batch):
+        # the whole grad computation traces with sharding rules inert: the
+        # chunked-attention custom_vjp backward is traced lazily during the
+        # grad pull-back — *after* pipeline_loss's own axis_rules(None)
+        # context has exited — and a logical sharding constraint resolving
+        # against ('data','model') inside the manual shard_map transpose is
+        # exactly the seq_len>kv_chunk manual_axes crash
+        with axis_rules(None):
+            loss, metrics, grads = compute_grads(state.params, batch)
         grads = shard_like_params(param_axes, grads)
         if grad_transform is not None:
             grads = grad_transform(grads)
+        return metrics, grads
+
+    def finish(state, metrics, grads):
         grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
         master, opt, stats = adamw_update(ocfg, grads, state.master, state.opt)
         params = jax.tree.map(lambda x: x.astype(cfg.compute_dtype), master)
         new_state = TrainState(params=params, master=master, opt=opt)
         return new_state, {**metrics, **stats}
 
-    step.pipeline = PipelineStepInfo(plan=plan, table=table, layout=layout)
+    info = PipelineStepInfo(plan=plan, table=table, layout=layout)
+
+    if compressor is not None:
+        def step_c(state: TrainState, err: Any, batch: dict):
+            metrics, grads = apply_update(state, batch)
+            grads, err = compressor.apply(grads, err)
+            new_state, out = finish(state, metrics, grads)
+            return new_state, err, out
+
+        step_c.pipeline = info
+        return step_c
+
+    def step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        metrics, grads = apply_update(state, batch)
+        return finish(state, metrics, grads)
+
+    step.pipeline = info
     return step

@@ -188,15 +188,30 @@ def test_pipeline_step_needs_stage_mesh():
         make_train_step(TINY, OCFG, plan=plan, mesh=None)
 
 
-def test_pipeline_rejects_silent_knobs():
-    # dp/tp with pp>1 would replicate compute, not shard it — loud failure
-    with pytest.raises(ValueError, match="not\\s+supported yet"):
-        resolve_plan(ParallelPlan(pp=2, dp=2, n_micro=2))
-    # grad_accum is superseded by n_micro on the pipeline path
-    plan = resolve_plan(ParallelPlan(pp=2, n_micro=2))
-    with pytest.raises(ValueError, match="n_micro instead"):
-        make_train_step(TINY, OCFG, grad_accum=4, plan=plan,
-                        mesh=make_pipeline_mesh(2))
+def test_pipeline_composition_guards():
+    # composed axes are allowed now, but the microbatch axis must still
+    # shard evenly across dp groups
+    with pytest.raises(ValueError, match="not divisible by dp"):
+        resolve_plan(ParallelPlan(pp=2, dp=2, n_micro=3))
+    # a dp=2 plan resolves (and defaults n_micro to 2*pp*dp)
+    plan = resolve_plan(ParallelPlan(pp=2, dp=2))
+    assert plan.n_micro == 8 and plan.n_micro_local == 4
+    # the composed step demands the matching per-axis mesh shape
+    with pytest.raises(ValueError, match="mesh shaped"):
+        make_train_step(TINY, OCFG, plan=plan, mesh=make_pipeline_mesh(2))
+    # compression without a data axis still has nothing to compress
+    from repro.ft.compress import GradCompressor
+
+    with pytest.raises(ValueError, match="no data axis"):
+        make_train_step(TINY, OCFG, plan=resolve_plan(ParallelPlan(pp=2)),
+                        mesh=make_pipeline_mesh(2),
+                        compressor=GradCompressor())
+    # tp inside the pipeline is dense-GQA only, and widths must divide
+    with pytest.raises(ValueError, match="dense GQA"):
+        rwkv = get_config("rwkv6-3b", smoke=True)
+        pl.pipeline_layout(rwkv, pp=2, tp=2)
+    with pytest.raises(ValueError, match="divide"):
+        pl.pipeline_layout(TINY.replace(num_kv_heads=1), pp=2, tp=2)
 
 
 # ----------------------------------------------- MegaScan bubble events -----

@@ -133,3 +133,96 @@ def test_grad_compression_relative_error_bound(seed, scale):
     num = float(jnp.linalg.norm(deq["g"] - g))
     den = float(jnp.linalg.norm(g)) + 1e-30
     assert num / den < 0.02
+
+
+# ----------------------------------------------- composed-plan invariants --
+
+
+@settings(max_examples=30, deadline=None)
+@given(S=st.integers(1, 4), C=st.integers(1, 3), g=st.integers(1, 3))
+def test_restack_params_is_a_permutation_roundtrip(S, C, g):
+    """restack_params is a pure permutation of the stacked-group axis: cell
+    (s, c) holds global groups (c*S + s)*g + j, and the inverse
+    swapaxes/reshape recovers the canonical [G, ...] stacking exactly."""
+    import jax.numpy as jnp
+
+    from repro.models import pipeline as pl
+
+    G = S * C * g
+    layout = pl.PipelineLayout("seg0", ("dense",), G, S, C, g)
+    leaf = jnp.arange(float(G * 2)).reshape(G, 2)
+    tree = {"w": leaf, "b": leaf[:, :1] + 100.0}
+    stacked = pl.restack_params(tree, layout)
+    w = np.asarray(stacked["w"])
+    assert w.shape == (S, C, g, 2)
+    for s in range(S):
+        for c in range(C):
+            for j in range(g):
+                np.testing.assert_array_equal(
+                    w[s, c, j], np.asarray(leaf[(c * S + s) * g + j])
+                )
+    back = jnp.swapaxes(stacked["w"], 0, 1).reshape(G, 2)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(leaf))
+    assert np.asarray(stacked["b"]).shape == (S, C, g, 1)
+
+
+@settings(max_examples=40, deadline=None)
+@given(dp=st.sampled_from([1, 2]), tp=st.sampled_from([1, 2]),
+       pp=st.integers(1, 4), mult=st.integers(1, 3),
+       n_chunks=st.sampled_from([1, 2]),
+       schedule=st.sampled_from(["1f1b", "dfc", "bfc", "wave"]))
+def test_forward_order_is_dp_local_and_complete(dp, tp, pp, mult, n_chunks, schedule):
+    """Under any composed plan the forward order visits every *dp-local*
+    (microbatch, chunk) pair exactly once — dp shards the microbatch axis,
+    tp never changes the traversal."""
+    from repro.parallel.plan import ParallelPlan, forward_order
+
+    plan = ParallelPlan(
+        dp=dp, tp=tp, pp=pp, n_micro=dp * mult, n_chunks=n_chunks,
+        schedule=schedule, wave=max(1, mult // 2),
+    ).validate()
+    fwd = [(m, c) for k, m, c in forward_order(plan) if k == "F"]
+    want = {(m, c) for m in range(mult) for c in range(n_chunks)}
+    assert len(fwd) == len(want) and set(fwd) == want
+    # tp is orthogonal to the traversal
+    base = ParallelPlan(dp=dp, tp=1, pp=pp, n_micro=dp * mult,
+                        n_chunks=n_chunks, schedule=schedule,
+                        wave=max(1, mult // 2))
+    assert forward_order(base) == forward_order(plan)
+
+
+@settings(max_examples=25, deadline=None)
+@given(dp=st.sampled_from([1, 2]), pp=st.integers(1, 3),
+       mult=st.integers(1, 3), n_chunks=st.sampled_from([1, 2]),
+       schedule=st.sampled_from(["1f1b", "dfc", "bfc", "wave"]))
+def test_time_table_dispatch_and_dataflow_under_composed_plans(
+    dp, pp, mult, n_chunks, schedule
+):
+    """The legalized table for a composed plan (a) dispatches every
+    (microbatch, chunk) on every stage exactly once, and (b) never runs a
+    consumer cell before its producer: stage s needs stage s-1's (m, c),
+    and chunk c's entry stage needs the last stage's (m, c-1)."""
+    from repro.parallel.plan import ParallelPlan, forward_order
+
+    plan = ParallelPlan(
+        dp=dp, pp=pp, n_micro=dp * mult, n_chunks=n_chunks,
+        schedule=schedule, wave=max(1, mult // 2),
+    ).validate()
+    nm = plan.n_micro_local
+    table = build_time_table(forward_order(plan), pp, n_chunks, nm)
+    run = np.asarray(table.run_act)
+    ms = np.asarray(table.run_m)
+    cs = np.asarray(table.run_c)
+    times: dict[tuple[int, int, int], int] = {}
+    for t in range(table.steps):
+        for s in range(pp):
+            if run[t, s]:
+                key = (int(ms[t, s]), int(cs[t, s]), s)
+                assert key not in times, f"duplicate dispatch {key}"
+                times[key] = t
+    assert len(times) == pp * nm * n_chunks
+    for (m, c, s), t in times.items():
+        if s > 0:
+            assert times[(m, c, s - 1)] < t
+        elif c > 0:
+            assert times[(m, c - 1, pp - 1)] < t
