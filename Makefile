@@ -28,7 +28,7 @@ ci: test test-matrix docs-check cli-smoke bench-pp bench-obs bench-ft
 # decode-latency-vs-max_len sweep (paged vs gathered) + continuous-vs-static;
 # persists the perf trajectory to BENCH_serve.json
 bench-serve:
-	python benchmarks/serve_bench.py --smoke --sweep --out BENCH_serve.json
+	python benchmarks/serve_bench.py --smoke --sweep --router-sweep --out BENCH_serve.json
 
 # pipeline-schedule sweep (simkit + real executor on a pp=2 host mesh);
 # asserts pipelined-vs-reference loss parity and persists BENCH_pp.json

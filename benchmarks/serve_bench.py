@@ -29,15 +29,30 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+import time
 from dataclasses import replace
 
 import jax
 
 from repro.configs import get_config
 from repro.core.simkit.engine import Engine
-from repro.core.simkit.workload import serving_throughput, serving_workload
+from repro.core.simkit.workload import (
+    bursty_requests,
+    poisson_requests,
+    router_summary,
+    router_workload,
+    serving_throughput,
+    serving_workload,
+)
 from repro.models import get_model
-from repro.serve import MegaServe, RandomDrafter, ServeConfig, blocks_for
+from repro.serve import (
+    MegaServe,
+    RandomDrafter,
+    Router,
+    RouterConfig,
+    ServeConfig,
+    blocks_for,
+)
 from repro.serve.server import StaticRunner, make_poisson_workload
 
 
@@ -88,8 +103,12 @@ def run_continuous_vs_static(cfg, params, args) -> dict:
 
     # ----------------------------------------------------------- continuous
     srv = MegaServe(cfg, params, scfg)
-    for s in specs:                                   # warmup: compile shapes
-        srv.submit(prompts[s.rid], s.max_new, arrival=0.0)
+    # compile every decode table-width bucket up front (which widths occur
+    # is timing-dependent, so no replay-based warmup covers them all), then
+    # warm the prefill buckets + host path with an untimed replay
+    srv.precompile()
+    for s in specs:
+        srv.submit(prompts[s.rid], s.max_new, arrival=s.arrival)
     srv.drain()
     srv.reset()
     for s in specs:                                   # timed replay
@@ -352,6 +371,139 @@ def run_spec_sweep(cfg, params, args) -> dict:
     return result
 
 
+def run_router_sweep(cfg, params, args) -> dict:
+    """MegaRoute policy sweep with one degraded replica.
+
+    The regime where placement *matters* (and the paper's straggler theme):
+    symmetric deterministic replicas make round-robin near-optimal — count
+    balance is work balance — so the sweep degrades replica 1 to 1/3 speed
+    via ``replica_step_every=[1, 3]`` (the straggler is stepped every 3rd
+    router tick).  In-process replicas step in lockstep, so sleeping inside
+    a replica's jitted step slows *every* replica's tick equally and leaves
+    per-tick throughput symmetric — step thinning is the honest
+    single-process straggler, and it matches the offline model's
+    ``replica_speeds`` semantics exactly.  Round-robin keeps feeding the
+    straggler; queue-aware policies divert.  Each (policy, traffic) cell
+    replays the same arrival trace through a 2-replica router; the gate
+    demands a load-aware policy beat round_robin by >= 1.2x on p99 TTFT
+    under bursty traffic, with the offline simkit evaluation (same speeds)
+    agreeing on the winner's rank vs round_robin."""
+    import numpy as np
+
+    lens, new_rng = (16, 32, 256), (4, 48)
+    n, rate, seed = args.router_requests, args.router_rate, args.seed
+    worst = blocks_for(max(lens) + new_rng[1], args.block_size)
+    scfg = ServeConfig(
+        num_slots=args.slots, block_size=args.block_size,
+        num_blocks=args.slots * worst + 1, max_blocks_per_slot=worst,
+    )
+    rng = np.random.default_rng(seed)
+    traces = {
+        "poisson": poisson_requests(
+            n, rate, prompt_lens=lens, max_new_range=new_rng, seed=seed),
+        "bursty": bursty_requests(
+            n, rate, burst_mult=10.0, burst_frac=0.2, burst_dwell_s=0.3,
+            prompt_lens=lens, max_new_range=new_rng, seed=seed),
+    }
+    prompts = {
+        t: {s.rid: rng.integers(2, cfg.vocab_size, size=s.prompt_len).tolist()
+            for s in specs}
+        for t, specs in traces.items()
+    }
+
+    # the straggler: replica 1 is stepped every 3rd router tick -> uniform
+    # 1/3 speed across prefill AND decode (see the docstring for why a
+    # sleep inside the replica's steps cannot model this in one process)
+    step_every = args.router_step_every
+    speed_slow = 1.0 / step_every
+    print(f"  degrading replica 1: stepped every {step_every} router ticks "
+          f"(relative speed {speed_slow:.2f}, prefill and decode alike)")
+
+    policies = ("round_robin", "least_kv", "jsq")
+    cells: dict = {t: {} for t in traces}
+    for traffic, specs in traces.items():
+        for policy in policies:
+            router = Router(
+                cfg, params, scfg, RouterConfig(replicas=2, policy=policy),
+                replica_step_every=[1, step_every],
+            )
+            # compile all decode widths up front, then warm prefill buckets
+            # + the host path by replaying the exact timed trace (any compile
+            # landing inside the timed window would swamp the policy signal)
+            router.precompile()
+            for s in specs:
+                router.submit(prompts[traffic][s.rid], s.max_new,
+                              arrival=s.arrival)
+            router.drain()
+            router.reset()
+            for s in specs:                            # timed replay
+                router.submit(prompts[traffic][s.rid], s.max_new,
+                              arrival=s.arrival)
+            router.drain()
+            met = router.metrics()
+            cells[traffic][policy] = {
+                "ttft_p50_s": met["ttft_p50_s"],
+                "ttft_p99_s": met["ttft_p99_s"],
+                "latency_p50_s": met["latency_p50_s"],
+                "latency_p99_s": met["latency_p99_s"],
+                "tokens_per_s": met["tokens_per_s"],
+                "shed_rate": met["shed_rate"],
+                "preemptions": met["preemptions"],
+                "placed_per_replica": met["placed_per_replica"],
+                "replica_tokens": met["replica_tokens"],
+                "load_skew": round(met["load_skew"], 3),
+            }
+            print(f"  {traffic:8s} {policy:12s} ttft p50/p99 "
+                  f"{met['ttft_p50_s'] * 1e3:7.1f}/"
+                  f"{met['ttft_p99_s'] * 1e3:7.1f} ms  "
+                  f"placed {met['placed_per_replica']}  "
+                  f"skew {met['load_skew']:.2f}")
+
+    # offline evaluation of the bursty scenario at the calibrated speeds:
+    # the simkit ranking must agree with the live winner's rank vs RR
+    offline: dict = {}
+    for policy in policies:
+        tasks = router_workload(
+            traces["bursty"], policy=policy, n_replicas=2,
+            num_slots=args.slots,
+            kv_capacity_tokens=scfg.usable_blocks * scfg.block_size,
+            replica_speeds=(1.0, speed_slow),
+        )
+        offline[policy] = router_summary(
+            Engine().run(tasks), n_replicas=2)["ttft_p99_s"]
+
+    bursty = cells["bursty"]
+    rr99 = bursty["round_robin"]["ttft_p99_s"]
+    ratios = {p: rr99 / max(bursty[p]["ttft_p99_s"], 1e-9)
+              for p in ("least_kv", "jsq")}
+    winner = min(bursty, key=lambda p: bursty[p]["ttft_p99_s"])
+    best_ratio = max(ratios.values())
+    ranking_agrees = (
+        winner != "round_robin"
+        and offline[winner] < offline["round_robin"]
+    )
+    print(f"  bursty p99-TTFT gain vs round_robin: "
+          + ", ".join(f"{p} {r:.2f}x" for p, r in ratios.items())
+          + f"  (online winner: {winner}; offline p99 "
+          + ", ".join(f"{p} {v * 1e3:.0f}ms" for p, v in offline.items())
+          + ")")
+    ok = best_ratio >= 1.2 and ranking_agrees
+    return {
+        "requests": n, "rate": rate, "slots": args.slots,
+        "prompt_lens": list(lens), "max_new_range": list(new_rng),
+        "degraded_replica": {"index": 1, "step_every": step_every,
+                             "relative_speed": round(speed_slow, 3)},
+        "cells": cells,
+        "offline_bursty_ttft_p99_s": {
+            p: round(v, 5) for p, v in offline.items()},
+        "bursty_gain_vs_round_robin": {
+            p: round(r, 3) for p, r in ratios.items()},
+        "online_winner": winner,
+        "ranking_agrees": bool(ranking_agrees),
+        "ok": bool(ok),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
@@ -382,6 +534,13 @@ def main() -> None:
     ap.add_argument("--spec-prompt-len", type=int, default=16)
     ap.add_argument("--spec-max-new", type=int, default=192)
     ap.add_argument("--spec-requests", type=int, default=6)
+    ap.add_argument("--router-sweep", action="store_true",
+                    help="MegaRoute placement-policy sweep (poisson + bursty "
+                         "traffic, one degraded replica)")
+    ap.add_argument("--router-requests", type=int, default=120)
+    ap.add_argument("--router-rate", type=float, default=40.0)
+    ap.add_argument("--router-step-every", type=int, default=4,
+                    help="straggler replica is stepped every N router ticks")
     ap.add_argument("--out", default="",
                     help="write results JSON (e.g. BENCH_serve.json)")
     args = ap.parse_args()
@@ -413,6 +572,15 @@ def main() -> None:
                 print("FAIL: spec decode below 1.3x on the n-gram-friendly "
                       "workload or below 0.9x on the adversarial one")
             print()
+    if args.router_sweep:
+        print(f"router policy sweep ({cfg.name}, 2 replicas x "
+              f"{args.slots} slots, one degraded):")
+        results["router"] = run_router_sweep(cfg, params, args)
+        ok &= results["router"]["ok"]
+        if not results["router"]["ok"]:
+            print("FAIL: no load-aware policy beat round_robin >=1.2x on "
+                  "bursty p99 TTFT with the offline ranking agreeing")
+        print()
     results["continuous_vs_static"] = run_continuous_vs_static(cfg, params, args)
     ok &= results["continuous_vs_static"]["ok"]
     if not results["continuous_vs_static"]["ok"]:

@@ -95,6 +95,25 @@ _SERVE = [
     ("--spec-decode", "serve.spec_decode", dict(action="store_true")),
     ("--spec-k", "serve.spec_k", dict(type=int)),
     ("--drafter", "serve.drafter", dict(choices=("ngram", "random"))),
+    ("--chunked-prefill", "serve.chunked_prefill", dict(
+        action="store_true",
+        help="stream long prompts chunk-by-chunk so decode interleaves")),
+    ("--chunk-len", "serve.chunk_len", dict(
+        type=int, help="prefill chunk length (0 = 2*block_size; must be a "
+                       "multiple of block_size)")),
+    ("--traffic", "serve.traffic", dict(
+        choices=("poisson", "bursty", "diurnal"),
+        help="arrival process for --continuous workloads")),
+    ("--replicas", "router.replicas", dict(
+        type=int, help="MegaRoute: front N engine replicas with a router")),
+    ("--router-policy", "router.policy", dict(
+        choices=("round_robin", "least_kv", "jsq"))),
+    ("--prefill-replicas", "router.prefill_replicas", dict(
+        type=int, help="disaggregate: first K replicas prefill-only, KV "
+                       "migrates to the decode tier after the first token")),
+    ("--slo-ttft", "router.slo_ttft_s", dict(
+        type=float, help="SLO-aware admission: shed/redirect requests whose "
+                         "estimated TTFT exceeds this (0 = off)")),
 ]
 
 _TRACE = [
@@ -227,16 +246,25 @@ def run(argv: list[str]) -> dict:
         if cfg.serve.continuous:
             outs, _ = out
             sc = session.results.get("serve_config", {})
+            routed = sc.get("replicas", 1) > 1 or sc.get("policy")
             print(f"arch={session.model_cfg.name} continuous "
                   f"slots={sc.get('num_slots', cfg.serve.slots)} "
                   f"blocks={sc.get('num_blocks')}x{sc.get('block_size')} "
                   f"requests={len(outs)} "
                   f"decode_path={session.results.get('decode_path')}"
                   + (f" spec_k={cfg.serve.spec_k} drafter={cfg.serve.drafter}"
-                     if cfg.serve.spec_decode else ""))
+                     if cfg.serve.spec_decode else "")
+                  + (f" replicas={sc.get('replicas')}"
+                     f" policy={sc.get('policy')}" if routed else "")
+                  + (f" traffic={sc.get('traffic')}"
+                     if sc.get("traffic", "poisson") != "poisson" else ""))
             keys = ["generated_tokens", "wall_s", "tokens_per_s",
-                    "ttft_p50_s", "ttft_p99_s", "latency_p50_s",
+                    "ttft_p50_s", "ttft_p99_s", "queue_wait_p50_s",
+                    "queue_wait_p99_s", "latency_p50_s",
                     "latency_p99_s", "preemptions", "steps"]
+            if routed:
+                keys += ["shed", "shed_rate", "redirects", "migrations",
+                         "placed_per_replica", "replica_tokens", "load_skew"]
             if cfg.serve.spec_decode:
                 keys += ["spec_proposed", "spec_accepted", "spec_accept_rate"]
             for k in keys:

@@ -89,6 +89,29 @@ class ServeSection:
     spec_decode: bool = False
     spec_k: int = 4
     drafter: str = "ngram"         # ngram | random
+    chunked_prefill: bool = False  # stream long prompts chunk-by-chunk
+    chunk_len: int = 0             # 0 = 2*block_size; else multiple of it
+    traffic: str = "poisson"       # poisson | bursty | diurnal
+
+
+@dataclass
+class RouterSection:
+    """MegaRoute front-end (``--replicas > 1`` or any ``--set router.*``).
+
+    A router fronts ``replicas`` MegaServe engines, placing each arrival
+    via ``policy`` (``round_robin`` / ``least_kv`` / ``jsq``) with optional
+    SLO-aware admission: ``slo_ttft_s > 0`` sheds (or, with ``shed=False``,
+    least-bad-admits) requests whose estimated TTFT busts the SLO.
+    ``prefill_replicas = k > 0`` disaggregates: the first ``k`` replicas
+    prefill only, their KV migrating to the decode tier after each first
+    token.
+    """
+
+    replicas: int = 1
+    policy: str = "round_robin"    # round_robin | least_kv | jsq
+    prefill_replicas: int = 0      # > 0 -> disaggregated prefill/decode
+    slo_ttft_s: float = 0.0        # 0 = no admission control
+    shed: bool = True              # shed SLO-busting requests vs least-bad
 
 
 @dataclass
@@ -261,6 +284,7 @@ class RunConfig:
     parallel: ParallelSection = field(default_factory=ParallelSection)
     train: TrainSection = field(default_factory=TrainSection)
     serve: ServeSection = field(default_factory=ServeSection)
+    router: RouterSection = field(default_factory=RouterSection)
     scan: ScanSection = field(default_factory=ScanSection)
     obs: ObsSection = field(default_factory=ObsSection)
     ft: FtSection = field(default_factory=FtSection)

@@ -350,35 +350,64 @@ class Session:
         import jax
 
         from repro.models import get_model
-        from repro.serve import MegaServe, get_drafter
+        from repro.serve import MegaServe, Router, RouterConfig, get_drafter
         from repro.serve.server import make_poisson_workload
 
         cfg, rc, s = self.model_cfg, self.run_cfg, self.run_cfg.serve
+        r = rc.router
+        # always construct the RouterConfig so router.* validation fires
+        # (bad policy / replica split fails loudly even on single-engine runs)
+        router_cfg = RouterConfig(
+            replicas=r.replicas, policy=r.policy,
+            prefill_replicas=r.prefill_replicas,
+            slo_ttft_s=r.slo_ttft_s, shed=r.shed,
+        )
+        use_router = (
+            router_cfg.replicas > 1
+            or router_cfg.disaggregated
+            or router_cfg.slo_ttft_s > 0
+            or router_cfg.policy != "round_robin"
+        )
         m = get_model(cfg)
         params = m.init(cfg, jax.random.PRNGKey(0))
         specs, prompts, serve_cfg = make_poisson_workload(
             cfg, n=s.requests, rate=s.rate, prompt_lens=tuple(s.prompt_lens),
             max_new_range=(max(1, s.max_new // 4), s.max_new),
             num_slots=s.slots, block_size=s.block_size,
-            num_blocks=s.num_blocks, seed=rc.seed,
+            num_blocks=s.num_blocks, seed=rc.seed, traffic=s.traffic,
         )
         serve_cfg = replace(
             serve_cfg, decode_path=s.decode_path,
             spec_decode=s.spec_decode, spec_k=s.spec_k,
+            chunked_prefill=s.chunked_prefill, chunk_len=s.chunk_len,
         )
         drafter = None
         if s.spec_decode and s.drafter != "ngram":
             drafter = get_drafter(s.drafter, vocab_size=cfg.vocab_size,
                                   seed=rc.seed)
-        srv = MegaServe.from_session(self, params, serve_cfg, drafter=drafter)
+        if use_router:
+            srv = Router.from_session(
+                self, params, serve_cfg, router_cfg, drafter=drafter)
+            replica_streams = [rep.streams for rep in srv.replicas]
+        else:
+            srv = MegaServe.from_session(
+                self, params, serve_cfg, drafter=drafter)
+            replica_streams = [srv.streams]
         for spec in specs:
             srv.submit(prompts[spec.rid], spec.max_new, arrival=spec.arrival)
         outs = srv.drain(on_step=self.notify_step)
         metrics = srv.metrics()
+        if use_router:
+            # replica lanes trace on their own rank=i tracers; fold them into
+            # the session tracer so the shared trace_out export sees them
+            self.tracer.events.extend(srv.trace_events())
         self.results["serve_config"] = {
             "num_slots": serve_cfg.num_slots,
             "block_size": serve_cfg.block_size,
             "num_blocks": serve_cfg.num_blocks,
+            "replicas": router_cfg.replicas if use_router else 1,
+            "policy": router_cfg.policy if use_router else "",
+            "traffic": s.traffic,
         }
         # MegaServe attaches probe captures per generated token (StreamItem),
         # not per tick — replay them through on_step so capture-observing
@@ -386,12 +415,15 @@ class Session:
         from repro.models.hooks import NULL_COLLECTOR
 
         if self.collector is not NULL_COLLECTOR:
-            for items in srv.streams.values():
-                for it in items:
-                    if it.captures:
-                        self.notify_step([], {"captures": it.captures})
+            for streams in replica_streams:
+                for items in streams.values():
+                    for it in items:
+                        if it.captures:
+                            self.notify_step([], {"captures": it.captures})
         self.results["serve_metrics"] = metrics
-        self.results["decode_path"] = srv.decode_path
+        self.results["decode_path"] = (
+            srv.replicas[0].decode_path if use_router else srv.decode_path
+        )
         return outs, metrics
 
     def _serve_static(self):

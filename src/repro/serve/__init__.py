@@ -16,6 +16,7 @@ from repro.serve.paged_cache import (
     pow2_bucket,
 )
 from repro.serve.request import Request, RequestStatus, aggregate_metrics
+from repro.serve.router import Router, RouterConfig
 from repro.serve.sampler import greedy_verify, rejection_verify, sample
 from repro.serve.scheduler import Scheduler, ServeConfig
 from repro.serve.server import MegaServe, run_static
@@ -32,6 +33,8 @@ __all__ = [
     "RandomDrafter",
     "Request",
     "RequestStatus",
+    "Router",
+    "RouterConfig",
     "Scheduler",
     "ServeConfig",
     "aggregate_metrics",

@@ -186,6 +186,53 @@ def make_spec_verify_step(
     return step
 
 
+def make_chunk_prefill_step(
+    cfg: ModelConfig,
+    collector: Collector = NULL_COLLECTOR,
+    *,
+    block_size: int,
+    paged_flags: Any,
+    impl: str = "auto",
+) -> Callable:
+    """Returns ``step(params, pool, tables [1, M], tokens [1, C], pos [1],
+    n_last) -> (pool, last_logits [V], captures)`` — one fixed-size prompt
+    chunk pushed through the q_len>1 paged kernel path straight into the
+    slot's pool blocks.
+
+    Chunk ``i`` writes K/V for positions ``pos .. pos+C-1`` of the owning
+    slot and attends causally over everything already in the table (the
+    same masking the spec-verify step relies on), so a long prompt becomes
+    ``ceil(P / C)`` cheap calls with decode ticks interleaved between them
+    instead of one monolithic stall.  ``n_last`` is the in-chunk index of
+    the prompt's final real token — only the last chunk's logits (sliced
+    there) are meaningful; earlier chunks' are discarded by the caller.
+    Pad tokens past ``n_last`` on the final chunk write garbage K/V beyond
+    the slot's ``kv_len``, where every later read masks them and the first
+    decode write overwrites them.  ``C`` is baked into the compiled
+    executable: one compile per (chunk_len, table width) pair.
+    """
+    if cfg.input_kind != "tokens":
+        raise ValueError(f"{cfg.name}: continuous batching serves token archs")
+    if cfg.use_mla:
+        raise ValueError(f"{cfg.name}: MLA decodes via the gathered path")
+    from repro.kernels.paged_attention.ops import PagedInfo
+    from repro.models import layers as L
+    from repro.models import lm
+
+    def step(params, pool, tables, tokens, pos, n_last):
+        paged = PagedInfo(tables=tables, block_size=block_size, impl=impl)
+        hidden, new_pool, aux = lm.forward(
+            cfg, params, {"tokens": tokens},
+            cache=pool, cache_pos=pos, paged=paged,
+            paged_flags=paged_flags, collector=collector,
+        )
+        last = jax.lax.dynamic_slice_in_dim(hidden, n_last, 1, axis=1)
+        logits = L.logits_fn(params, cfg, last)[0, 0]
+        return new_pool, logits, aux.get("captures", {})
+
+    return step
+
+
 def make_slot_decode_step(cfg: ModelConfig, collector: Collector = NULL_COLLECTOR) -> Callable:
     """Returns ``step(params, dense_cache, tokens [S], pos [S]) ->
     (dense_cache, logits [S, V], captures)`` with per-slot positions.

@@ -210,6 +210,39 @@ class PagedKVCache:
 
         return jax.tree.map(leaf, pool, dense, self.paged)
 
+    # ------------------------------------------- slot migration (export)
+    def export_slot(self, pool: Any, phys: jax.Array, slot: jax.Array) -> Any:
+        """Pull one slot's cache state out of the pool as a self-contained
+        bundle — the disaggregation hand-off unit.  Paged leaves become
+        ``[n, n_blk, bs, *feat]`` (the slot's blocks in table order);
+        slot-state leaves become ``[n, *feat]`` (the slot's row).  ``phys``
+        may be padded with null-block entries: the padding rows carry
+        whatever the null block holds and are ignored on import.
+        """
+
+        def leaf(p, paged):
+            if paged:
+                return jnp.take(p, phys, axis=1)
+            return p[:, slot]
+
+        return jax.tree.map(leaf, pool, self.paged)
+
+    # ------------------------------------------- slot migration (import)
+    def import_slot(
+        self, pool: Any, bundle: Any, phys: jax.Array, slot: jax.Array
+    ) -> Any:
+        """Deposit an :meth:`export_slot` bundle into this pool at ``phys``
+        blocks + slot-state row ``slot``.  Padding entries of ``phys`` must
+        point at the null block, where the extra writes land harmlessly
+        (same convention as the decode scatter of inactive slots)."""
+
+        def leaf(p, b, paged):
+            if paged:
+                return p.at[:, phys].set(b.astype(p.dtype))
+            return p.at[:, slot].set(b.astype(p.dtype))
+
+        return jax.tree.map(leaf, pool, bundle, self.paged)
+
     # ------------------------------------------------ scatter (prefill)
     def scatter_prefill(
         self, pool: Any, filled: Any, slot: jax.Array, phys: jax.Array

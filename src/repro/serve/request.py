@@ -68,6 +68,14 @@ class Request:
 
     # ------------------------------------------------------------ metrics
     @property
+    def queue_wait(self) -> float | None:
+        """Arrival -> first admission: the queueing share of TTFT, split out
+        so router-induced waiting is attributable separately from compute."""
+        if self.t_admitted is None:
+            return None
+        return self.t_admitted - self.arrival
+
+    @property
     def ttft(self) -> float | None:
         if self.t_first_token is None:
             return None
@@ -94,6 +102,7 @@ def aggregate_metrics(requests: list[Request], wall: float) -> dict:
     fin = [r for r in requests if r.status is RequestStatus.FINISHED]
     ttfts = [r.ttft for r in fin if r.ttft is not None]
     lats = [r.latency for r in fin if r.latency is not None]
+    waits = [r.queue_wait for r in fin if r.queue_wait is not None]
     total_tokens = sum(len(r.generated) for r in fin)
     return {
         "finished": len(fin),
@@ -103,6 +112,8 @@ def aggregate_metrics(requests: list[Request], wall: float) -> dict:
         "tokens_per_s": total_tokens / wall if wall > 0 else 0.0,
         "ttft_p50_s": percentile(ttfts, 50),
         "ttft_p99_s": percentile(ttfts, 99),
+        "queue_wait_p50_s": percentile(waits, 50),
+        "queue_wait_p99_s": percentile(waits, 99),
         "latency_p50_s": percentile(lats, 50),
         "latency_p99_s": percentile(lats, 99),
         "preemptions": sum(r.n_preemptions for r in requests),

@@ -1,0 +1,12 @@
+"""MegaRoute: a router fronting N MegaServe engine replicas.
+
+Placement policies and SLO-aware admission live in
+``repro.core.simkit.workload`` (jax-free) so the offline discrete-event
+evaluation (``router_workload``) and this live router execute the same
+decision logic; this package adds the engine-replica orchestration —
+stepping, disaggregated prefill→decode KV migration, and merged metrics.
+"""
+
+from repro.serve.router.router import Router, RouterConfig
+
+__all__ = ["Router", "RouterConfig"]

@@ -68,6 +68,27 @@ class ServeConfig:
     spec_ngram_max: int = 4        # prompt-lookup drafter: longest suffix
     spec_ngram_min: int = 1        #   n-gram tried, shortest accepted
     spec_retry: int = 16           # steps between draft re-probes at len 0
+    # chunked prefill: prompts longer than ``chunk_len`` stream into the
+    # pool ``chunk_len`` tokens per tick through the q_len>1 paged kernel
+    # path, so decode ticks interleave between chunks instead of stalling
+    # behind one monolithic long-prompt prefill.  ``chunk_len=0`` auto-sizes
+    # to 2 * block_size; explicit values must be a multiple of ``block_size``
+    # (the prefill bucket quantum — chunks must land on block boundaries).
+    chunked_prefill: bool = False
+    chunk_len: int = 0
+
+    def __post_init__(self) -> None:
+        if self.chunk_len < 0:
+            raise ValueError(f"chunk_len must be >= 0, got {self.chunk_len}")
+        if self.chunk_len and self.chunk_len % self.block_size != 0:
+            raise ValueError(
+                f"chunk_len={self.chunk_len} must be a multiple of the "
+                f"prefill bucket size (block_size={self.block_size})"
+            )
+
+    @property
+    def resolved_chunk_len(self) -> int:
+        return self.chunk_len or 2 * self.block_size
 
     @property
     def max_len(self) -> int:
@@ -155,6 +176,45 @@ class Scheduler:
             out.append(Admission(slot, rid, tokens, list(phys),
                                  is_recompute=req.n_preemptions > 0))
         return out
+
+    # -------------------------------------------------- migration intake
+    def adopt(self, req: Request, pos: int, last_tok: int) -> tuple[int, list[int]] | None:
+        """Take over a request mid-flight (disaggregated prefill hand-off):
+        claim a free slot plus enough blocks to cover ``pos`` already-written
+        cache positions and register the request as RUNNING — the imported
+        KV blocks land where the returned ``phys`` list says.  Returns
+        ``(slot, phys)``, or ``None`` when no slot/blocks are free (the
+        router retries next tick)."""
+        if req.rid in self.requests:
+            raise ValueError(f"duplicate rid {req.rid}")
+        slot = next((s for s, r in enumerate(self.slots) if r is None), None)
+        if slot is None:
+            return None
+        phys = self.allocator.try_alloc(blocks_for(pos, self.cfg.block_size))
+        if phys is None:
+            return None
+        self.requests[req.rid] = req
+        self.slots[slot] = req.rid
+        self.blocks[slot] = list(phys)
+        self.pos[slot] = pos
+        self.last_tok[slot] = last_tok
+        self.tables[slot, :] = 0
+        self.tables[slot, : len(phys)] = phys
+        self._seq += 1
+        self._admit_seq[slot] = self._seq
+        req.status = RequestStatus.RUNNING
+        return slot, list(phys)
+
+    def release_request(self, rid: int) -> None:
+        """Drop a request entirely (migrated away): free its slot/blocks and
+        forget it — unlike preemption it is NOT requeued here, and unlike
+        eviction it is not marked finished (the adopting replica owns its
+        lifecycle from now on)."""
+        slot = next((s for s, r in enumerate(self.slots) if r == rid), None)
+        if slot is None:
+            raise ValueError(f"rid {rid} not active (cannot release)")
+        self._release(slot)
+        del self.requests[rid]
 
     # ----------------------------------------------------------- capacity
     def ensure_capacity(self, extra: dict[int, int] | None = None) -> list[int]:

@@ -32,6 +32,7 @@ from repro.core.tracing.tracer import Tracer
 from repro.models import get_model
 from repro.models.hooks import Collector, NULL_COLLECTOR
 from repro.serve.engine import (
+    make_chunk_prefill_step,
     make_decode_step,
     make_paged_decode_step,
     make_prefill_step,
@@ -99,14 +100,24 @@ class MegaServe:
         use_jit: bool = True,
         wrap_step: Callable[[Callable], Callable] | None = None,
         registry=None,
+        metrics_prefix: str = "serve.",
+        prefill_only: bool = False,
     ):
         self.cfg = cfg
         self.serve_cfg = serve_cfg
         self.params = params
         # live telemetry (a repro.obs.MetricsRegistry, or None): TTFT and
         # decode/prefill latency histograms, queue-depth / KV-occupancy
-        # gauges, preemption + spec-acceptance counters publish per tick
+        # gauges, preemption + spec-acceptance counters publish per tick.
+        # ``metrics_prefix`` namespaces the series (the router runs replica
+        # i under "serve.r{i}." so per-replica load is attributable).
         self.registry = registry
+        self._mpfx = metrics_prefix
+        # disaggregation: a prefill-only replica admits + prefills (emitting
+        # each request's first token) but never decodes — the router harvests
+        # its filled slots via ``export_request`` and hands them to a decode
+        # replica's ``adopt_request``
+        self.prefill_only = prefill_only
         # decorator applied to every jitted engine step (prefill / decode /
         # spec-verify) — the ModulePlugin.wrap_step attach point
         self._wrap = wrap_step if wrap_step is not None else (lambda f: f)
@@ -227,6 +238,46 @@ class MegaServe:
         leaves = jax.tree.leaves(self.kv.paged)
         self._pad_prefill = bool(leaves) and all(leaves)
 
+        # chunked prefill: prompts longer than chunk_len stream block-aligned
+        # chunks through the q_len>1 paged path, one chunk per tick, so
+        # decode ticks for other slots interleave between them
+        self._chunking: dict[int, dict] = {}
+        self._chunk_step = None
+        if serve_cfg.chunked_prefill:
+            if path != "paged" or not self._pad_prefill:
+                raise ValueError(
+                    f"{cfg.name}: chunked_prefill needs the paged decode path "
+                    "and an attention-only KV cache (recurrent slot-state "
+                    "must integrate every position in one pass); got "
+                    f"decode_path={path!r}"
+                )
+            chunk_fn = make_chunk_prefill_step(
+                cfg, collector, block_size=serve_cfg.block_size,
+                paged_flags=self.kv.paged, impl=serve_cfg.paged_attn_impl,
+            )
+
+            def chunk_step(params, pool, tables, tokens, pos, n_last):
+                pool, logits, caps = chunk_fn(
+                    params, pool, tables, tokens, pos, n_last
+                )
+                return pool, jnp.argmax(logits, -1), caps
+
+            self._chunk_step = self._wrap(
+                jax.jit(chunk_step, donate_argnums=(1,))
+                if use_jit else chunk_step
+            )
+
+        # slot migration (disaggregated prefill -> decode hand-off): pure
+        # gather/scatter over the pool, retraced per pow2 block-bucket width.
+        # Export reads the pool (no donation); import rewrites it (donated).
+        self._export_step = (
+            jax.jit(self.kv.export_slot) if use_jit else self.kv.export_slot
+        )
+        self._import_step = (
+            jax.jit(self.kv.import_slot, donate_argnums=(0,))
+            if use_jit else self.kv.import_slot
+        )
+
     @classmethod
     def from_session(cls, session, params: Any, serve_cfg: ServeConfig, **kw):
         """Construct a server wired to a ``repro.app.Session``: the session's
@@ -249,9 +300,15 @@ class MegaServe:
         *,
         arrival: float | None = None,
         eos_id: int | None = None,
+        rid: int | None = None,
     ) -> int:
-        rid = self._next_rid
-        self._next_rid += 1
+        """Queue a prompt; returns its rid.  ``rid`` lets a router supply
+        globally-unique ids across replicas (local auto-ids stay ahead)."""
+        if rid is None:
+            rid = self._next_rid
+            self._next_rid += 1
+        else:
+            self._next_rid = max(self._next_rid, rid + 1)
         req = Request(
             rid=rid, prompt=list(prompt), max_new=max_new,
             arrival=self._clock() if arrival is None else arrival,
@@ -297,14 +354,36 @@ class MegaServe:
         self._prefill_cache[key] = fn
         return fn
 
+    def _m(self, name: str) -> str:
+        return self._mpfx + name
+
     # --------------------------------------------------------------- step
     def step(self) -> dict:
         """One scheduler tick; returns what happened for observability."""
         now = self._clock()
         admitted, tokens_out = [], 0
+        chunk_min = (
+            self.serve_cfg.resolved_chunk_len
+            if self._chunk_step is not None else None
+        )
 
         for adm in self.sched.admit(now):
+            if self.registry is not None and not adm.is_recompute:
+                wait = self.sched.requests[adm.rid].queue_wait
+                if wait is not None:
+                    self.registry.histogram(
+                        self._m("queue_wait_s")).observe(wait)
             n_real = len(adm.tokens)
+            if chunk_min is not None and n_real > chunk_min:
+                # long prompt: don't stall this tick on a monolithic prefill
+                # — stream it chunk-by-chunk (first chunk runs just below),
+                # with decode ticks interleaving until the last chunk lands
+                self._chunking[adm.slot] = {
+                    "rid": adm.rid, "toks": list(adm.tokens),
+                    "written": 0, "t0": now,
+                }
+                admitted.append(adm.rid)
+                continue
             fn = self._prefill_for(n_real)
             toks, phys = list(adm.tokens), list(adm.phys)
             if self._pad_prefill:
@@ -330,35 +409,50 @@ class MegaServe:
             self._emit(adm.slot, int(tok), caps, slot_axis=False)
             self.sched.record_token(adm.slot, int(tok), now)
             if self.registry is not None:
-                self.registry.histogram("serve.prefill_s").observe(now - t_pre)
+                self.registry.histogram(self._m("prefill_s")).observe(now - t_pre)
                 if not adm.is_recompute:  # recomputes kept their first TTFT
                     ttft = self.sched.requests[adm.rid].ttft
                     if ttft is not None:
-                        self.registry.histogram("serve.ttft_s").observe(ttft)
+                        self.registry.histogram(self._m("ttft_s")).observe(ttft)
             admitted.append(adm.rid)
             tokens_out += 1
+
+        # one chunk per chunking slot per tick; a completed last chunk
+        # emits that request's first token
+        if self._chunking:
+            tokens_out += self._chunk_tick()
+            now = self._clock()
 
         # a prefill token can complete a request (max_new=1, or eos emitted
         # right away): evict before decode or the slot runs one step past
         # its budget and buries the eos
         finished = self.sched.evict_finished(now)
 
-        # speculative drafts are gathered before capacity planning: a slot
-        # about to verify k drafts needs 1 + k write positions covered
-        drafts: dict[int, list[int]] = {}
-        if self._spec_step is not None and self.sched.active_slots():
-            drafts = self._collect_drafts()
-        preempted = self.sched.ensure_capacity(
-            {s: 1 + len(d) for s, d in drafts.items()} if drafts else None
-        )
+        preempted: list[int] = []
         active = self.sched.active_slots()
-        drafts = {s: d for s, d in drafts.items() if s in set(active)}
-        if active:
-            if drafts:
-                tokens_out += self._spec_tick(active, drafts)
-            else:
-                tokens_out += self._decode_tick(active)
-            now = self._clock()
+        # mid-chunking slots hold blocks but cannot decode yet: their ride
+        # through the batched step would be wasted work, so they are excluded
+        # from drafting/decoding (their garbage write at pos lands where the
+        # first real decode write overwrites it before it could become live)
+        runnable = [s for s in active if s not in self._chunking]
+        if not self.prefill_only:
+            # speculative drafts are gathered before capacity planning: a
+            # slot about to verify k drafts needs 1 + k write positions
+            drafts: dict[int, list[int]] = {}
+            if self._spec_step is not None and runnable:
+                drafts = self._collect_drafts()
+            preempted = self.sched.ensure_capacity(
+                {s: 1 + len(d) for s, d in drafts.items()} if drafts else None
+            )
+            active = self.sched.active_slots()
+            runnable = [s for s in active if s not in self._chunking]
+            drafts = {s: d for s, d in drafts.items() if s in set(runnable)}
+            if runnable:
+                if drafts:
+                    tokens_out += self._spec_tick(runnable, drafts)
+                else:
+                    tokens_out += self._decode_tick(runnable)
+                now = self._clock()
 
         finished += self.sched.evict_finished(now)
         if admitted or active:
@@ -375,18 +469,73 @@ class MegaServe:
             "tokens": tokens_out,
         }
 
+    def _chunk_tick(self) -> int:
+        """Advance every mid-chunking slot by one prompt chunk; returns the
+        number of first tokens emitted (chunking runs that finished).  A slot
+        whose rid no longer matches was preempted mid-chunking — its entry is
+        dropped and the re-admission restarts chunking from scratch, so
+        greedy streams stay token-identical under preemption."""
+        scfg = self.serve_cfg
+        C, bs = scfg.resolved_chunk_len, scfg.block_size
+        out = 0
+        for slot in sorted(self._chunking):
+            st = self._chunking[slot]
+            if self.sched.slots[slot] != st["rid"]:
+                del self._chunking[slot]
+                continue
+            toks, w = st["toks"], st["written"]
+            n_real = len(toks)
+            chunk = toks[w : w + C]
+            final = w + C >= n_real
+            n_last = (n_real - 1 - w) if final else (len(chunk) - 1)
+            chunk = chunk + [0] * (C - len(chunk))
+            # table width: pow2 bucket over the blocks this chunk can touch,
+            # so the compile cache stays O(log max_blocks) like live tables
+            width = min(
+                pow2_bucket(blocks_for(w + C, bs)), scfg.max_blocks_per_slot
+            )
+            tables = jnp.asarray(self.sched.tables[slot : slot + 1, :width])
+            t0 = self._clock()
+            with self.tracer.scope(
+                "prefill_chunk", kind="compute", rid=st["rid"], slot=slot,
+                offset=w, tokens=min(C, n_real - w), step=self.step_idx,
+            ):
+                self.pool, tok, caps = self._chunk_step(
+                    self.params, self.pool, tables,
+                    jnp.asarray(chunk, jnp.int32)[None, :],
+                    jnp.asarray([w], jnp.int32), jnp.int32(n_last),
+                )
+                tok = jax.block_until_ready(tok)
+            now = self._clock()
+            if self.registry is not None:
+                self.registry.histogram(self._m("chunk_s")).observe(now - t0)
+            st["written"] = w + C
+            if not final:
+                continue
+            del self._chunking[slot]
+            self._emit(slot, int(tok), caps, slot_axis=False)
+            self.sched.record_token(slot, int(tok), now)
+            req = self.sched.requests[st["rid"]]
+            if self.registry is not None:
+                self.registry.histogram(
+                    self._m("prefill_s")).observe(now - st["t0"])
+                if req.n_preemptions == 0 and req.ttft is not None:
+                    self.registry.histogram(self._m("ttft_s")).observe(req.ttft)
+            out += 1
+        return out
+
     def _publish_tick(
         self, active: list[int], preempted: list[int], tokens_out: int
     ) -> None:
         """Per-tick serve series into the registry (host bookkeeping only)."""
         reg, alloc = self.registry, self.sched.allocator
-        reg.counter("serve.tokens").inc(tokens_out)
+        reg.counter(self._m("tokens")).inc(tokens_out)
         if preempted:
-            reg.counter("serve.preemptions").inc(len(preempted))
-        reg.gauge("serve.queue_depth").set(len(self.sched.waiting))
-        reg.gauge("serve.active_slots").set(len(active))
+            reg.counter(self._m("preemptions")).inc(len(preempted))
+        reg.gauge(self._m("queue_depth")).set(len(self.sched.waiting))
+        reg.gauge(self._m("active_slots")).set(len(active))
         used = alloc.num_blocks - alloc.reserved - alloc.num_free
-        reg.gauge("serve.kv_occupancy").set(
+        reg.gauge(self._m("kv_occupancy")).set(
             used / max(self.serve_cfg.usable_blocks, 1)
         )
 
@@ -418,7 +567,7 @@ class MegaServe:
             next_tok = jax.block_until_ready(next_tok)
         now = self._clock()
         if self.registry is not None:
-            self.registry.histogram("serve.decode_step_s").observe(now - t_dec)
+            self.registry.histogram(self._m("decode_step_s")).observe(now - t_dec)
         next_tok = np.asarray(next_tok)
         for s in active:
             self.sched.advance(s)
@@ -440,6 +589,8 @@ class MegaServe:
         drafts: dict[int, list[int]] = {}
         proposed = 0
         for s in self.sched.active_slots():
+            if s in self._chunking:   # no committed tokens to draft from yet
+                continue
             req = self.sched.requests[self.sched.slots[s]]
             if req.draft_len == 0:
                 # exponential re-probe backoff: a request that keeps failing
@@ -549,14 +700,14 @@ class MegaServe:
         )
         if self.registry is not None:
             reg = self.registry
-            reg.histogram("serve.verify_step_s").observe(v_dur)
+            reg.histogram(self._m("verify_step_s")).observe(v_dur)
             drafted = sum(len(d) for d in drafts.values())
             if drafted:
-                reg.counter("serve.spec_proposed").inc(drafted)
-                reg.counter("serve.spec_accepted").inc(accepted_total)
-                reg.gauge("serve.spec_accept_rate").set(
-                    reg.counter("serve.spec_accepted").value
-                    / reg.counter("serve.spec_proposed").value
+                reg.counter(self._m("spec_proposed")).inc(drafted)
+                reg.counter(self._m("spec_accepted")).inc(accepted_total)
+                reg.gauge(self._m("spec_accept_rate")).set(
+                    reg.counter(self._m("spec_accepted")).value
+                    / reg.counter(self._m("spec_proposed")).value
                 )
         return emitted_total
 
@@ -573,6 +724,116 @@ class MegaServe:
             take = (lambda a: np.asarray(a[slot])) if slot_axis else np.asarray
             captures = jax.tree.map(take, caps)
         self.streams[rid].append(StreamItem(self.step_idx, tok, captures))
+
+    # ---------------------------------------------------------- migration
+    def exportable(self) -> list[int]:
+        """Rids whose prefill has completed here but whose decode has not
+        begun — on a prefill-only replica these are ready for hand-off (a
+        colocated replica never exports; it decodes its own prefills)."""
+        if not self.prefill_only:
+            return []
+        out = []
+        for s in self.sched.active_slots():
+            if s in self._chunking:
+                continue
+            req = self.sched.requests[self.sched.slots[s]]
+            if req.t_first_token is not None and not req.done:
+                out.append(req.rid)
+        return out
+
+    def export_request(self, rid: int) -> dict:
+        """Pull a prefilled request out of this replica: its KV blocks leave
+        the pool as an ``export_slot`` bundle (padded to the pow2 block
+        bucket with null-block entries), its slot/blocks are freed, and the
+        ``Request`` object + token stream ride the package so timing fields
+        and emitted tokens survive the migration."""
+        slot = next(
+            (s for s, r in enumerate(self.sched.slots) if r == rid), None)
+        if slot is None:
+            raise ValueError(f"rid {rid} not active (cannot export)")
+        req = self.sched.requests[rid]
+        phys = list(self.sched.blocks[slot])
+        pos = self.sched.pos[slot]
+        last_tok = self.sched.last_tok[slot]
+        width = min(
+            pow2_bucket(max(len(phys), 1)), self.serve_cfg.max_blocks_per_slot
+        )
+        padded = phys + [0] * (width - len(phys))
+        with self.tracer.scope(
+            "kv_export", kind="comm", rid=rid, slot=slot, blocks=len(phys),
+            step=self.step_idx,
+        ):
+            bundle = self._export_step(
+                self.pool, jnp.asarray(padded, jnp.int32), jnp.int32(slot)
+            )
+            bundle = jax.block_until_ready(bundle)
+        stream = self.streams.pop(rid)
+        self.sched.release_request(rid)
+        return {
+            "req": req, "stream": stream, "bundle": bundle,
+            "n_blocks": len(phys), "width": width,
+            "pos": pos, "last_tok": last_tok,
+        }
+
+    def adopt_request(self, package: dict) -> bool:
+        """Install an ``export_request`` package into this replica: claim a
+        slot + blocks, scatter the bundle's KV into them, and resume decode
+        from the migrated cursor.  Returns False (package untouched) when no
+        slot/blocks are free — the router retries next tick.  Bit-identical
+        KV import means the greedy continuation is token-identical to the
+        colocated engine's."""
+        req = package["req"]
+        got = self.sched.adopt(req, package["pos"], package["last_tok"])
+        if got is None:
+            return False
+        slot, phys = got
+        padded = phys + [0] * (package["width"] - len(phys))
+        with self.tracer.scope(
+            "kv_import", kind="comm", rid=req.rid, slot=slot,
+            blocks=package["n_blocks"], step=self.step_idx,
+        ):
+            self.pool = self._import_step(
+                self.pool, package["bundle"],
+                jnp.asarray(padded, jnp.int32), jnp.int32(slot),
+            )
+        self.streams[req.rid] = package["stream"]
+        self._next_rid = max(self._next_rid, req.rid + 1)
+        return True
+
+    # --------------------------------------------------------- precompile
+    def precompile(self) -> int:
+        """Compile every decode table-width variant before serving begins.
+
+        The decode step retraces per pow2 table-width bucket
+        (``_live_tables``), and which widths occur is timing-dependent — a
+        width first reached mid-run pays its XLA compile inside the serving
+        loop (hundreds of ms), exactly the jitter a latency SLO or benchmark
+        cannot absorb.  Dummy calls walk the width ladder once, chaining the
+        donated pool through so no extra pool stays live; null-block tables
+        make every write land in block 0.  Returns the variant count."""
+        if not self._use_jit:
+            return 0
+        n_slots = self.serve_cfg.num_slots
+        max_w = self.serve_cfg.max_blocks_per_slot
+        if self.decode_path == "paged":
+            widths, w = [], 1
+            while True:
+                widths.append(w)
+                if w >= max_w:
+                    break
+                w = min(2 * w, max_w)
+        else:
+            widths = [max_w]          # gathered tables are never sliced
+        toks = jnp.zeros((n_slots,), jnp.int32)
+        pos = jnp.zeros((n_slots,), jnp.int32)
+        pool = jax.tree.map(jnp.zeros_like, self.pool)
+        tok = None
+        for w in widths:
+            tables = jnp.zeros((n_slots, w), jnp.int32)
+            pool, tok, _ = self._decode(self.params, pool, tables, toks, pos)
+        if tok is not None:
+            jax.block_until_ready(tok)
+        return len(widths)
 
     # -------------------------------------------------------------- drain
     def drain(
@@ -642,6 +903,7 @@ class MegaServe:
         self.sched.requests.clear()
         self.streams.clear()
         self.tracer.clear()
+        self._chunking.clear()
         self.step_idx = 0
         self._base = self._raw_clock()
 
@@ -766,18 +1028,33 @@ def make_poisson_workload(
     block_size: int = 16,
     num_blocks: int = 0,
     seed: int = 0,
+    traffic: str = "poisson",
 ):
-    """Shared CLI workload builder (launcher + benchmark): Poisson arrival
-    specs, random token prompts, and a ``ServeConfig`` sized so the worst
-    request fits one slot — ``num_blocks=0`` sizes the pool for zero
-    preemption (every slot can hold its worst case simultaneously, plus the
-    reserved null block).  The sizing also covers speculative decoding:
-    draft budgets are capped so every real verify write stays inside the
-    worst-case footprint (``_collect_drafts``).  Returns (specs, prompts by
-    rid, serve_cfg)."""
-    from repro.core.simkit.workload import poisson_requests
+    """Shared CLI workload builder (launcher + benchmark): arrival specs
+    (``traffic`` picks the process — ``poisson`` / ``bursty`` MMPP /
+    ``diurnal`` sinusoidal), random token prompts, and a ``ServeConfig``
+    sized so the worst request fits one slot — ``num_blocks=0`` sizes the
+    pool for zero preemption (every slot can hold its worst case
+    simultaneously, plus the reserved null block).  The sizing also covers
+    speculative decoding: draft budgets are capped so every real verify
+    write stays inside the worst-case footprint (``_collect_drafts``).
+    Returns (specs, prompts by rid, serve_cfg)."""
+    from repro.core.simkit.workload import (
+        bursty_requests,
+        diurnal_requests,
+        poisson_requests,
+    )
 
-    specs = poisson_requests(
+    gens = {
+        "poisson": poisson_requests,
+        "bursty": bursty_requests,
+        "diurnal": diurnal_requests,
+    }
+    if traffic not in gens:
+        raise ValueError(
+            f"unknown traffic {traffic!r}; one of {sorted(gens)}"
+        )
+    specs = gens[traffic](
         n, rate, prompt_lens=prompt_lens, max_new_range=max_new_range,
         seed=seed,
     )
