@@ -23,12 +23,15 @@ cli-smoke:
 	python -m repro serve --arch qwen2-0.5b --smoke --continuous \
 		--requests 8 --max-new 8 --rate 500
 
-ci: test test-matrix docs-check cli-smoke bench-pp bench-obs bench-ft
+ci: test test-matrix docs-check cli-smoke bench-serve bench-pp bench-obs bench-ft
 
-# decode-latency-vs-max_len sweep (paged vs gathered) + continuous-vs-static;
-# persists the perf trajectory to BENCH_serve.json
+# decode-latency-vs-max_len sweep (paged vs gathered), flash-vs-dense prefill
+# sweep (op-count gated, measured parity), cold-vs-warm start-to-first-token
+# through the persistent compile cache, + continuous-vs-static; persists the
+# perf trajectory to BENCH_serve.json
 bench-serve:
-	python benchmarks/serve_bench.py --smoke --sweep --router-sweep --out BENCH_serve.json
+	python benchmarks/serve_bench.py --smoke --sweep --prefill-sweep \
+		--coldstart --router-sweep --out BENCH_serve.json
 
 # pipeline-schedule sweep (simkit + real executor on a pp=2 host mesh);
 # asserts pipelined-vs-reference loss parity and persists BENCH_pp.json

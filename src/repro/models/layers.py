@@ -467,10 +467,39 @@ def gqa_apply(
         q = q + p["bq"].astype(x.dtype)
         kk = kk + p["bk"].astype(x.dtype)
         vv = vv + p["bv"].astype(x.dtype)
+    mrope = cfg.mrope_sections and mrope_position_ids is not None
+    if (
+        cache is not None and paged is not None and paged.prefill
+        and S > 1 and causal and not mrope and collector is NULL_COLLECTOR
+    ):
+        # fused flash-prefill: norm + rope + pool scatter + banded attention
+        # in one op straight against the block pool — full prefill, chunked
+        # prefill, and the spec-verify step all land here (decode S == 1
+        # keeps the decode kernel below).  The raw q rides into the kernel,
+        # whose prologue fuses the qk_norm/rope entry; the K side reuses the
+        # jnp helpers so pool contents match this function's generic branch
+        # bit-for-bit.  Gated off whenever a collector is live: the fused op
+        # never materializes the roped q/k this function would tag.
+        from repro.kernels.paged_attention.ops import paged_prefill
+
+        o, new_cache = paged_prefill(
+            q, kk, vv, cache["k"], cache["v"],
+            tables=paged.tables, positions=positions,
+            block_size=paged.block_size,
+            scale=1.0 / math.sqrt(dh),
+            window=window, impl=paged.impl, layer=paged.layer,
+            q_norm=p["q_norm"] if cfg.qk_norm else None,
+            k_norm=p["k_norm"] if cfg.qk_norm else None,
+            eps=cfg.norm_eps, rope_theta=cfg.rope_theta,
+            q_start=paged.q_start,
+        )
+        out = jnp.einsum(
+            "bshk,hkd->bsd", o.astype(x.dtype), p["wo"].astype(x.dtype)
+        )
+        return out, new_cache
     if cfg.qk_norm:
         q = rms_head_norm(p["q_norm"], q, cfg.norm_eps)
         kk = rms_head_norm(p["k_norm"], kk, cfg.norm_eps)
-    mrope = cfg.mrope_sections and mrope_position_ids is not None
     if mrope:
         q = apply_mrope(q, mrope_position_ids, cfg.mrope_sections, cfg.rope_theta)
     else:

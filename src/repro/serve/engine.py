@@ -174,7 +174,11 @@ def make_spec_verify_step(
     from repro.models import lm
 
     def step(params, pool, tables, tokens, pos):
-        paged = PagedInfo(tables=tables, block_size=block_size, impl=impl)
+        # prefill=True: the Q verify rows take the fused flash-prefill path
+        # (q-block x kv-block kernel) instead of the generic dense branch
+        paged = PagedInfo(
+            tables=tables, block_size=block_size, impl=impl, prefill=True,
+        )
         hidden, new_pool, aux = lm.forward(
             cfg, params, {"tokens": tokens},
             cache=pool, cache_pos=pos, paged=paged,
@@ -220,7 +224,10 @@ def make_chunk_prefill_step(
     from repro.models import lm
 
     def step(params, pool, tables, tokens, pos, n_last):
-        paged = PagedInfo(tables=tables, block_size=block_size, impl=impl)
+        # prefill=True: the C chunk rows take the fused flash-prefill path
+        paged = PagedInfo(
+            tables=tables, block_size=block_size, impl=impl, prefill=True,
+        )
         hidden, new_pool, aux = lm.forward(
             cfg, params, {"tokens": tokens},
             cache=pool, cache_pos=pos, paged=paged,
@@ -231,6 +238,86 @@ def make_chunk_prefill_step(
         return new_pool, logits, aux.get("captures", {})
 
     return step
+
+
+def make_flash_prefill_step(
+    cfg: ModelConfig,
+    collector: Collector = NULL_COLLECTOR,
+    *,
+    block_size: int,
+    paged_flags: Any,
+    impl: str = "auto",
+) -> Callable:
+    """Returns ``step(params, pool, tables [1, M], tokens [1, P], n_real) ->
+    (pool, last_logits [V], captures)`` — the whole (right-padded) prompt in
+    one call *straight into the slot's pool blocks* via the flash-prefill
+    kernel: no dense ``[1, P, ...]`` cache is ever materialized and no
+    ``scatter_prefill`` copy follows.
+
+    ``q_start=0`` pins query 0 at absolute position 0 (statically, for the
+    whole bucket), which unlocks the causal lower-triangular band in the
+    kernel/oracle: prefill attention cost is ~P²/2 score work instead of the
+    dense path's P² plus a pool-sized gather/scatter round trip.  Pad tokens
+    past ``n_real`` write garbage K/V beyond the slot's ``kv_len`` exactly
+    like the dense path's pad positions — masked by every later read,
+    overwritten by the first decode write.  ``P`` (and the table width
+    ``M = P / block_size``) is baked into the executable: one compile per
+    pow2 bucket, same ladder the dense path uses.
+    """
+    if cfg.input_kind != "tokens":
+        raise ValueError(f"{cfg.name}: continuous batching serves token archs")
+    if cfg.use_mla:
+        raise ValueError(f"{cfg.name}: MLA decodes via the gathered path")
+    from repro.kernels.paged_attention.ops import PagedInfo
+    from repro.models import layers as L
+    from repro.models import lm
+
+    def step(params, pool, tables, tokens, n_real):
+        paged = PagedInfo(
+            tables=tables, block_size=block_size, impl=impl,
+            prefill=True, q_start=0,
+        )
+        pos = jnp.zeros((1,), jnp.int32)
+        hidden, new_pool, aux = lm.forward(
+            cfg, params, {"tokens": tokens},
+            cache=pool, cache_pos=pos, paged=paged,
+            paged_flags=paged_flags, collector=collector,
+        )
+        last = jax.lax.dynamic_slice_in_dim(hidden, n_real - 1, 1, axis=1)
+        logits = L.logits_fn(params, cfg, last)[0, 0]
+        return new_pool, logits, aux.get("captures", {})
+
+    return step
+
+
+def make_seg_prefill(cfg: ModelConfig, collector: Collector = NULL_COLLECTOR) -> Callable:
+    """Returns ``seg(params, cache, tokens [1, W], pos) -> (cache, last_logits
+    [V], captures)`` — one exact-length prompt *segment* integrated into a
+    dense cache at offset ``pos``, for recurrent-state families (rwkv /
+    griffin) whose prefill must visit every real position.
+
+    The caller splits ``n_real`` into its descending binary decomposition
+    (13 -> 8 + 4 + 1) and runs one segment per power of two, carrying the
+    cache between calls: the compile set becomes {segment widths} x {cache
+    buckets} — O(log² max_len) — instead of one executable per exact prompt
+    length, which is what makes ``precompile()`` finite for these families.
+    The last segment ends exactly at ``n_real``, so its final position's
+    logits are the first-token logits.
+    """
+    if cfg.input_kind != "tokens":
+        raise ValueError(f"{cfg.name}: continuous batching serves token archs")
+    from repro.models import layers as L
+    from repro.models import lm
+
+    def seg(params, cache, tokens, pos):
+        hidden, new_cache, aux = lm.forward(
+            cfg, params, {"tokens": tokens},
+            cache=cache, cache_pos=pos, collector=collector,
+        )
+        logits = L.logits_fn(params, cfg, hidden[:, -1:])[0, 0]
+        return new_cache, logits, aux.get("captures", {})
+
+    return seg
 
 
 def make_slot_decode_step(cfg: ModelConfig, collector: Collector = NULL_COLLECTOR) -> Callable:

@@ -108,6 +108,16 @@ def pow2_bucket(n: int) -> int:
     return 1 if n <= 1 else 1 << (n - 1).bit_length()
 
 
+def pow2_segments(n: int) -> list[int]:
+    """Descending binary decomposition of ``n`` (13 -> [8, 4, 1]): the exact
+    segment widths the recurrent-family prefill driver runs, so any prompt
+    length is covered by O(log n) power-of-two segment executables instead of
+    one compile per exact length."""
+    if n <= 0:
+        raise ValueError(f"need n >= 1, got {n}")
+    return [1 << b for b in range(n.bit_length() - 1, -1, -1) if n >> b & 1]
+
+
 @dataclass(frozen=True)
 class PoolSpec:
     num_slots: int

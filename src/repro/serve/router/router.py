@@ -123,6 +123,7 @@ class Router:
         replica_step_every: Sequence[int] | None = None,
         registry=None,
         profile: ServeProfile = ServeProfile(),
+        compile_cache=None,
     ):
         self.router_cfg = router_cfg
         self.registry = registry
@@ -181,6 +182,7 @@ class Router:
                 prefill_only=(
                     router_cfg.disaggregated and i < router_cfg.prefill_replicas
                 ),
+                compile_cache=compile_cache,
             )
             # share the router's epoch: every replica clock reads t=0 at
             # router construction (the _clock lambda reads _base at call
@@ -209,6 +211,7 @@ class Router:
         session's MegaScope collector and metrics registry, and every
         replica's jitted steps run through the plugins' ``wrap_step``."""
         kw.setdefault("registry", getattr(session, "metrics_registry", None))
+        kw.setdefault("compile_cache", getattr(session, "compile_cache", None))
         return cls(
             session.model_cfg, params, serve_cfg, router_cfg,
             collector=session.collector, wrap_step=session.wrap_step, **kw,
@@ -451,11 +454,23 @@ class Router:
                 time.sleep(max(0.0, min(nxt - self._clock(), 1e-3)))
         return self.streams()
 
-    def precompile(self) -> int:
-        """Precompile every replica's decode table-width variants (see
+    def precompile(self) -> dict:
+        """Precompile every replica's bucketed step variants (see
         ``MegaServe.precompile``) so no replica pays an XLA compile inside
-        the serving loop.  Returns the total variant count."""
-        return sum(srv.precompile() for srv in self.replicas)
+        the serving loop.  Returns the per-path counts and compile
+        milliseconds aggregated across the fleet (prefill / chunk / verify /
+        decode are tallied separately, plus ``total``)."""
+        agg: dict[str, Any] = {}
+        for srv in self.replicas:
+            rep = srv.precompile()
+            for k, v in rep.items():
+                if not isinstance(v, dict) or k == "cache":
+                    continue
+                a = agg.setdefault(k, {"count": 0, "ms": 0.0})
+                a["count"] += v["count"]
+                a["ms"] += v["ms"]
+        agg["total"] = sum(v["count"] for v in agg.values())
+        return agg
 
     # ------------------------------------------------------------- output
     def streams(self) -> dict[int, list[int]]:

@@ -62,6 +62,12 @@ class ServeConfig:
     # family supports it and no MegaScope collector needs per-slot captures
     decode_path: str = "auto"      # auto | paged | gathered
     paged_attn_impl: str = "auto"  # auto | xla | pallas | pallas_interpret
+    # prefill engine: "flash" runs the whole (right-padded) prompt through
+    # the flash-prefill kernel straight into the slot's pool blocks (banded
+    # causal attention, no dense-cache round trip); "dense" is the original
+    # dense prefill + scatter_prefill copy; "auto" picks flash whenever the
+    # paged decode path and an attention-only cache family make it legal
+    prefill_path: str = "auto"     # auto | flash | dense
     # speculative decoding (draft + batched paged verification)
     spec_decode: bool = False      # verify spec_k drafts/slot per step
     spec_k: int = 4                # max draft tokens per request per step

@@ -28,19 +28,28 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.compile_cache import CompileCache, aot_compile, mesh_descriptor
 from repro.core.tracing.tracer import Tracer
 from repro.models import get_model
 from repro.models.hooks import Collector, NULL_COLLECTOR
 from repro.serve.engine import (
     make_chunk_prefill_step,
     make_decode_step,
+    make_flash_prefill_step,
     make_paged_decode_step,
     make_prefill_step,
+    make_seg_prefill,
     make_slot_decode_step,
     make_slot_prefill,
     make_spec_verify_step,
 )
-from repro.serve.paged_cache import PagedKVCache, PoolSpec, blocks_for, pow2_bucket
+from repro.serve.paged_cache import (
+    PagedKVCache,
+    PoolSpec,
+    blocks_for,
+    pow2_bucket,
+    pow2_segments,
+)
 from repro.serve.request import Request, RequestStatus, aggregate_metrics
 from repro.serve.sampler import greedy_verify, sample
 from repro.serve.scheduler import Scheduler, ServeConfig
@@ -102,6 +111,7 @@ class MegaServe:
         registry=None,
         metrics_prefix: str = "serve.",
         prefill_only: bool = False,
+        compile_cache: CompileCache | None = None,
     ):
         self.cfg = cfg
         self.serve_cfg = serve_cfg
@@ -121,6 +131,15 @@ class MegaServe:
         # decorator applied to every jitted engine step (prefill / decode /
         # spec-verify) — the ModulePlugin.wrap_step attach point
         self._wrap = wrap_step if wrap_step is not None else (lambda f: f)
+        # persistent compilation cache (core.compile_cache): precompile()
+        # consults it so a restarted process deserializes yesterday's
+        # executables instead of re-running XLA
+        self.compile_cache = compile_cache
+        # AOT-compiled executables by (step kind, *static widths); the tick
+        # paths dispatch through ``_aot_exec.get(key, jitted_fallback)`` so a
+        # precompiled bucket skips the jit call cache entirely and an
+        # unseen width still traces on demand
+        self._aot_exec: dict[tuple, Callable] = {}
         self.sched = Scheduler(serve_cfg)
         self.tracer = tracer or Tracer(rank=0, enabled=True)
         self.collector = collector
@@ -194,16 +213,19 @@ class MegaServe:
                 return pool, jnp.argmax(logits, -1), caps
 
         # donate the pool: it is the largest buffer in the program and every
-        # step rewrites it, so double-buffering it would waste a full KV pool
-        self._decode = self._wrap(
+        # step rewrites it, so double-buffering it would waste a full KV pool.
+        # The unwrapped jit is kept separate so precompile() can .lower() it
+        # (wrap_step decorators do not preserve the AOT surface).
+        self._decode_jit = (
             jax.jit(decode_fn, donate_argnums=(1,)) if use_jit else decode_fn
         )
+        self._decode = self._wrap(self._decode_jit)
 
         # speculative decoding: draft proposer + batched verification step.
         # Recurrent slot-state (rwkv / griffin rec blocks) integrates every
         # token into an O(1) state that cannot be rewound to the accepted
         # prefix, so speculation is limited to attention-only cache families.
-        self._spec_step = None
+        self._spec_step = self._spec_jit = None
         self.drafter = drafter
         if serve_cfg.spec_decode:
             leaves = jax.tree.leaves(self.kv.paged)
@@ -224,9 +246,10 @@ class MegaServe:
                 cfg, collector, block_size=serve_cfg.block_size,
                 paged_flags=self.kv.paged, impl=serve_cfg.paged_attn_impl,
             )
-            self._spec_step = self._wrap(
+            self._spec_jit = (
                 jax.jit(spec_fn, donate_argnums=(1,)) if use_jit else spec_fn
             )
+            self._spec_step = self._wrap(self._spec_jit)
 
         self._slot_prefill = make_slot_prefill(cfg, collector)
         self._prefill_cache: dict[int, Callable] = {}
@@ -238,11 +261,72 @@ class MegaServe:
         leaves = jax.tree.leaves(self.kv.paged)
         self._pad_prefill = bool(leaves) and all(leaves)
 
+        # prefill-path selection: the flash kernel streams the whole padded
+        # prompt straight into the slot's pool blocks (banded causal
+        # attention, no dense-cache materialization or scatter copy), which
+        # needs the paged decode path's pool/table plumbing and an
+        # attention-only cache family
+        flash_ok = path == "paged" and self._pad_prefill
+        ppath = serve_cfg.prefill_path
+        if ppath == "auto":
+            # the flash kernel is a Pallas/TPU program; off-TPU the dispatch
+            # falls back to the banded jnp oracle, which is a correctness
+            # harness, not a win — one-shot dense prefill beats it there.
+            # "auto" therefore only picks flash where the kernel is real (or
+            # explicitly requested via paged_attn_impl); forcing
+            # prefill_path="flash" still works everywhere for parity tests.
+            impl = serve_cfg.paged_attn_impl
+            kernel_real = impl in ("pallas", "pallas_interpret") or (
+                impl == "auto" and jax.default_backend() == "tpu")
+            ppath = "flash" if (flash_ok and kernel_real) else "dense"
+        elif ppath not in ("flash", "dense"):
+            raise ValueError(
+                f"unknown prefill_path {serve_cfg.prefill_path!r}")
+        if ppath == "flash" and not flash_ok:
+            raise ValueError(
+                f"{cfg.name}: prefill_path='flash' needs the paged decode "
+                "path and an attention-only KV cache (got "
+                f"decode_path={path!r})"
+            )
+        self.prefill_path = ppath
+        self._flash_fn = None
+        if ppath == "flash":
+            self._flash_fn = make_flash_prefill_step(
+                cfg, collector, block_size=serve_cfg.block_size,
+                paged_flags=self.kv.paged, impl=serve_cfg.paged_attn_impl,
+            )
+
+        # recurrent-state families (rwkv / griffin) prefill through the
+        # binary segment driver: exact pow2-width segments integrate into a
+        # block-bucketed dense cache, bounding the compile set at
+        # O(log^2 max_len) instead of one executable per exact prompt
+        # length.  A live collector keeps the one-shot exact path so probe
+        # captures still cover the whole prompt in a single forward.
+        self._seg_ok = not self._pad_prefill and not self._capture
+        self._seg_jit = self._seg_step = self._seg_finish = None
+        if self._seg_ok:
+            seg_fn = make_seg_prefill(cfg, collector)
+
+            def seg_finish(cache, logits, pool, slot, phys):
+                pool = self.kv.scatter_prefill(pool, cache, slot, phys)
+                return pool, jnp.argmax(logits, -1)
+
+            self._seg_jit = (
+                jax.jit(seg_fn, donate_argnums=(1,)) if use_jit else seg_fn
+            )
+            self._seg_step = self._wrap(self._seg_jit)
+            # donate only the pool: the dense cache's [n, 1, ...] leaves
+            # cannot alias the pool's [n, slots|blocks, ...] outputs anyway
+            self._seg_finish = (
+                jax.jit(seg_finish, donate_argnums=(2,))
+                if use_jit else seg_finish
+            )
+
         # chunked prefill: prompts longer than chunk_len stream block-aligned
         # chunks through the q_len>1 paged path, one chunk per tick, so
         # decode ticks for other slots interleave between them
         self._chunking: dict[int, dict] = {}
-        self._chunk_step = None
+        self._chunk_step = self._chunk_jit = None
         if serve_cfg.chunked_prefill:
             if path != "paged" or not self._pad_prefill:
                 raise ValueError(
@@ -262,10 +346,11 @@ class MegaServe:
                 )
                 return pool, jnp.argmax(logits, -1), caps
 
-            self._chunk_step = self._wrap(
+            self._chunk_jit = (
                 jax.jit(chunk_step, donate_argnums=(1,))
                 if use_jit else chunk_step
             )
+            self._chunk_step = self._wrap(self._chunk_jit)
 
         # slot migration (disaggregated prefill -> decode hand-off): pure
         # gather/scatter over the pool, retraced per pow2 block-bucket width.
@@ -286,6 +371,7 @@ class MegaServe:
         step runs through the plugins' ``wrap_step`` chain — so serving
         emits through the same observability spine as every workload."""
         kw.setdefault("registry", getattr(session, "metrics_registry", None))
+        kw.setdefault("compile_cache", getattr(session, "compile_cache", None))
         return cls(
             session.model_cfg, params, serve_cfg,
             collector=session.collector, tracer=session.tracer,
@@ -321,36 +407,87 @@ class MegaServe:
 
     # ------------------------------------------------------------ prefill
     def _prefill_blocks(self, n_tokens: int) -> int:
-        """Block count the prefill executable for ``n_tokens`` covers: the
-        exact count for state families, a power-of-two bucket (capped at the
-        table width) for attention-only families — bounding the jit compile
-        cache at O(log max_len) entries even under preemption-recompute
-        prompts of arbitrary length."""
+        """Block count the prefill executable for ``n_tokens`` covers: a
+        power-of-two bucket (capped at the table width) for every family —
+        bounding the compile cache at O(log max_len) entries even under
+        preemption-recompute prompts of arbitrary length.  The one exception
+        is a state family under a live MegaScope collector, which keeps the
+        exact count (its one-shot exact prefill carries the whole-prompt
+        capture semantics)."""
         n_blk = blocks_for(n_tokens, self.serve_cfg.block_size)
-        if not self._pad_prefill:
+        if not self._pad_prefill and not self._seg_ok:
             return n_blk
         return min(pow2_bucket(n_blk), self.serve_cfg.max_blocks_per_slot)
 
-    def _prefill_for(self, n_tokens: int) -> Callable:
+    def _build_prefill_jit(self, n_blk: int) -> Callable:
+        """The one-shot prefill jit for a ``n_blk``-block bucket (flash or
+        dense), unwrapped so precompile() can ``.lower()`` it.  Signature:
+        ``(params, tokens [1,P], n_real, pool, slot, phys [n_blk])``."""
         bs = self.serve_cfg.block_size
+        cache_len = n_blk * bs
+
+        if self._flash_fn is not None:
+            flash = self._flash_fn
+
+            def prefill_fn(params, tokens, n_real, pool, slot, phys):
+                # the padded block list *is* the slot's table row: the
+                # kernel writes K/V straight into those pool blocks
+                pool, logits, caps = flash(
+                    params, pool, phys[None, :], tokens, n_real
+                )
+                return pool, jnp.argmax(logits, -1), caps
+        else:
+
+            def prefill_fn(params, tokens, n_real, pool, slot, phys):
+                filled, logits, caps = self._slot_prefill(
+                    params, tokens, n_real, cache_len
+                )
+                pool = self.kv.scatter_prefill(pool, filled, slot, phys)
+                return pool, jnp.argmax(logits, -1), caps
+
+        return (
+            jax.jit(prefill_fn, donate_argnums=(3,))
+            if self._use_jit else prefill_fn
+        )
+
+    def _make_seg_driver(self, n_tokens: int) -> Callable:
+        """Prefill driver for recurrent-state families: runs the descending
+        binary decomposition of ``n_tokens`` as exact pow2 segments through
+        one shared jitted segment step (shape-keyed on (width, cache_len)),
+        then scatters the filled dense cache into the slot's pool blocks.
+        Matches the one-shot prefill signature so ``step()`` is agnostic."""
+        from repro.models import lm
+
+        bs = self.serve_cfg.block_size
+        n_blk = self._prefill_blocks(n_tokens)
+        cache_len = n_blk * bs
+        segs = pow2_segments(n_tokens)
+
+        def driver(params, tokens, n_real, pool, slot, phys):
+            cache = lm.init_cache(self.cfg, 1, cache_len)
+            off, logits, caps = 0, None, {}
+            for w in segs:
+                exe = self._aot_exec.get(("seg", w, cache_len), self._seg_step)
+                cache, logits, caps = exe(
+                    params, cache, tokens[:, off:off + w], jnp.int32(off)
+                )
+                off += w
+            fin = self._aot_exec.get(("seg_fin", n_blk), self._seg_finish)
+            pool, tok = fin(cache, logits, pool, slot, phys)
+            return pool, tok, caps
+
+        return driver
+
+    def _prefill_for(self, n_tokens: int) -> Callable:
         n_blk = self._prefill_blocks(n_tokens)
         key = n_blk if self._pad_prefill else n_tokens
         fn = self._prefill_cache.get(key)
         if fn is not None:
             return fn
-        cache_len = n_blk * bs
-
-        def prefill_fn(params, tokens, n_real, pool, slot, phys):
-            filled, logits, caps = self._slot_prefill(
-                params, tokens, n_real, cache_len
-            )
-            pool = self.kv.scatter_prefill(pool, filled, slot, phys)
-            return pool, jnp.argmax(logits, -1), caps
-
-        fn = self._wrap(
-            jax.jit(prefill_fn, donate_argnums=(3,))
-            if self._use_jit else prefill_fn
-        )
+        if self._seg_ok:
+            fn = self._make_seg_driver(n_tokens)
+        else:
+            fn = self._wrap(self._build_prefill_jit(n_blk))
         self._prefill_cache[key] = fn
         return fn
 
@@ -386,12 +523,17 @@ class MegaServe:
                 continue
             fn = self._prefill_for(n_real)
             toks, phys = list(adm.tokens), list(adm.phys)
+            n_blk = self._prefill_blocks(n_real)
             if self._pad_prefill:
                 # right-pad tokens to the bucketed cache length and the block
                 # list to the bucket width with null-block entries (their
                 # garbage K/V land in block 0, which every read masks out)
-                n_blk = self._prefill_blocks(n_real)
                 toks += [0] * (n_blk * self.serve_cfg.block_size - n_real)
+                phys += [0] * (n_blk - len(phys))
+            elif self._seg_ok:
+                # segment driver: tokens stay exact (recurrent state must
+                # integrate every real position, none invented), but the
+                # block list pads to the bucketed scatter width
                 phys += [0] * (n_blk - len(phys))
             tokens = jnp.asarray(toks, jnp.int32)[None, :]
             t_pre = self._clock()
@@ -402,7 +544,7 @@ class MegaServe:
             ):
                 self.pool, tok, caps = fn(
                     self.params, tokens, jnp.int32(n_real), self.pool,
-                    adm.slot, jnp.asarray(phys, jnp.int32),
+                    jnp.int32(adm.slot), jnp.asarray(phys, jnp.int32),
                 )
                 tok = jax.block_until_ready(tok)
             now = self._clock()
@@ -500,7 +642,8 @@ class MegaServe:
                 "prefill_chunk", kind="compute", rid=st["rid"], slot=slot,
                 offset=w, tokens=min(C, n_real - w), step=self.step_idx,
             ):
-                self.pool, tok, caps = self._chunk_step(
+                fn = self._aot_exec.get(("chunk", width), self._chunk_step)
+                self.pool, tok, caps = fn(
                     self.params, self.pool, tables,
                     jnp.asarray(chunk, jnp.int32)[None, :],
                     jnp.asarray([w], jnp.int32), jnp.int32(n_last),
@@ -561,7 +704,8 @@ class MegaServe:
             "decode", kind="compute", step=self.step_idx,
             active=len(active), tokens=len(active),
         ):
-            self.pool, next_tok, caps = self._decode(
+            fn = self._aot_exec.get(("decode", tables.shape[1]), self._decode)
+            self.pool, next_tok, caps = fn(
                 self.params, self.pool, tables, toks, pos
             )
             next_tok = jax.block_until_ready(next_tok)
@@ -641,7 +785,8 @@ class MegaServe:
         pos = jnp.asarray(self.sched.pos, jnp.int32)
         tables = self._live_tables(active)
         v0 = self._clock()
-        self.pool, greedy, _logits, caps = self._spec_step(
+        fn = self._aot_exec.get(("verify", tables.shape[1]), self._spec_step)
+        self.pool, greedy, _logits, caps = fn(
             self.params, self.pool, tables, jnp.asarray(toks), pos
         )
         greedy = np.asarray(jax.block_until_ready(greedy))
@@ -801,39 +946,176 @@ class MegaServe:
         return True
 
     # --------------------------------------------------------- precompile
-    def precompile(self) -> int:
-        """Compile every decode table-width variant before serving begins.
+    def _avatar(self, tree: Any) -> Any:
+        return jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree
+        )
 
-        The decode step retraces per pow2 table-width bucket
-        (``_live_tables``), and which widths occur is timing-dependent — a
-        width first reached mid-run pays its XLA compile inside the serving
-        loop (hundreds of ms), exactly the jitter a latency SLO or benchmark
-        cannot absorb.  Dummy calls walk the width ladder once, chaining the
-        donated pool through so no extra pool stays live; null-block tables
-        make every write land in block 0.  Returns the variant count."""
+    def _width_ladder(self, hi: int) -> list[int]:
+        """The pow2 bucket ladder 1, 2, 4, ... capped at ``hi`` — exactly
+        the static widths the tick paths can request."""
+        ws, w = [], 1
+        while True:
+            ws.append(w)
+            if w >= hi:
+                return ws
+            w = min(2 * w, hi)
+
+    def _aot(
+        self, jitted: Any, avatars: tuple, *, kind: str,
+        donate: tuple, extra: dict,
+    ) -> tuple[Callable, bool]:
+        """AOT-compile one bucketed step variant through the persistent
+        compile cache (or plain lower+compile when none is attached)."""
+        params_sig = [
+            f"{l.shape}/{l.dtype}" for l in jax.tree.leaves(self._avatar(self.params))
+        ]
+        return aot_compile(
+            jitted, avatars, cache=self.compile_cache,
+            key_parts={
+                "model": self.cfg,
+                "serve": self.serve_cfg,
+                "mesh": mesh_descriptor(None),
+                "capture": self._capture,
+                "params": params_sig,
+                "step": kind,
+                "donate": list(donate),
+                **extra,
+            },
+        )
+
+    def precompile(self) -> dict:
+        """Ahead-of-time compile every bucketed step variant before serving.
+
+        Each engine step retraces per pow2 static-shape bucket (decode /
+        verify table widths, chunk widths, prefill prompt buckets, recurrent
+        segment widths x cache buckets), and which bucket occurs first is
+        timing-dependent — a shape reached mid-run pays its XLA compile
+        inside the serving loop (hundreds of ms), exactly the jitter a
+        latency SLO or cold-start benchmark cannot absorb.  This walks every
+        ladder through ``jit(...).lower().compile()`` (consulting the
+        persistent ``compile_cache`` when attached, so a restarted process
+        deserializes instead of recompiling) and parks the executables where
+        the tick paths dispatch first (``_aot_exec`` / ``_prefill_cache``).
+
+        Returns per-path counts and wall-clock milliseconds::
+
+            {"decode": {"count", "ms"}, "prefill": {...}, "chunk": {...},
+             "verify": {...}, "total": n[, "cache": CacheStats dict]}
+
+        and publishes each path's ms as a ``precompile_ms.<path>`` gauge.
+        """
+        out: dict[str, Any] = {
+            p: {"count": 0, "ms": 0.0}
+            for p in ("decode", "prefill", "chunk", "verify")
+        }
+        out["total"] = 0
         if not self._use_jit:
-            return 0
-        n_slots = self.serve_cfg.num_slots
-        max_w = self.serve_cfg.max_blocks_per_slot
-        if self.decode_path == "paged":
-            widths, w = [], 1
-            while True:
-                widths.append(w)
-                if w >= max_w:
-                    break
-                w = min(2 * w, max_w)
-        else:
-            widths = [max_w]          # gathered tables are never sliced
-        toks = jnp.zeros((n_slots,), jnp.int32)
-        pos = jnp.zeros((n_slots,), jnp.int32)
-        pool = jax.tree.map(jnp.zeros_like, self.pool)
-        tok = None
+            return out
+        scfg = self.serve_cfg
+        n_slots, max_w, bs = scfg.num_slots, scfg.max_blocks_per_slot, scfg.block_size
+        i32 = jnp.int32
+        pa = self._avatar(self.params)
+        pool_a = self._avatar(self.pool)
+        scalar = jax.ShapeDtypeStruct((), i32)
+
+        def run(path, jitted, avatars, *, donate, **extra):
+            t0 = self._raw_clock()
+            exe, _hit = self._aot(
+                jitted, avatars, kind=path, donate=donate, extra=extra
+            )
+            out[path]["count"] += 1
+            out[path]["ms"] += (self._raw_clock() - t0) * 1e3
+            return exe
+
+        # ---- decode: one executable per live-table width bucket
+        widths = (
+            self._width_ladder(max_w)
+            if self.decode_path == "paged" else [max_w]
+        )
+        toks_a = jax.ShapeDtypeStruct((n_slots,), i32)
+        pos_a = jax.ShapeDtypeStruct((n_slots,), i32)
         for w in widths:
-            tables = jnp.zeros((n_slots, w), jnp.int32)
-            pool, tok, _ = self._decode(self.params, pool, tables, toks, pos)
-        if tok is not None:
-            jax.block_until_ready(tok)
-        return len(widths)
+            tb = jax.ShapeDtypeStruct((n_slots, w), i32)
+            exe = run("decode", self._decode_jit,
+                      (pa, pool_a, tb, toks_a, pos_a),
+                      donate=(1,), width=w)
+            self._aot_exec[("decode", w)] = self._wrap(exe)
+
+        # ---- speculative verify: same width ladder, Q = spec_k + 1 rows
+        if self._spec_jit is not None:
+            vt = jax.ShapeDtypeStruct((n_slots, scfg.spec_k + 1), i32)
+            for w in widths:
+                tb = jax.ShapeDtypeStruct((n_slots, w), i32)
+                exe = run("verify", self._spec_jit,
+                          (pa, pool_a, tb, vt, pos_a),
+                          donate=(1,), width=w)
+                self._aot_exec[("verify", w)] = self._wrap(exe)
+
+        # ---- chunked prefill: the chunk-tick table widths actually reachable
+        if self._chunk_jit is not None:
+            C = scfg.resolved_chunk_len
+            cws = sorted({
+                min(pow2_bucket(blocks_for(off + C, bs)), max_w)
+                for off in range(0, scfg.max_len, C)
+            })
+            ct = jax.ShapeDtypeStruct((1, C), i32)
+            cp = jax.ShapeDtypeStruct((1,), i32)
+            for w in cws:
+                tb = jax.ShapeDtypeStruct((1, w), i32)
+                exe = run("chunk", self._chunk_jit,
+                          (pa, pool_a, tb, ct, cp, scalar),
+                          donate=(1,), width=w)
+                self._aot_exec[("chunk", w)] = self._wrap(exe)
+
+        # ---- prefill: prompt block-bucket ladder (padded families) or the
+        # pow2 segment-width x cache-bucket grid (recurrent families)
+        if self._pad_prefill:
+            for n_blk in self._width_ladder(max_w):
+                tok_a = jax.ShapeDtypeStruct((1, n_blk * bs), i32)
+                phys_a = jax.ShapeDtypeStruct((n_blk,), i32)
+                exe = run("prefill", self._build_prefill_jit(n_blk),
+                          (pa, tok_a, scalar, pool_a, scalar, phys_a),
+                          donate=(3,), n_blk=n_blk,
+                          prefill_impl=self.prefill_path)
+                self._prefill_cache[n_blk] = self._wrap(exe)
+        elif self._seg_ok:
+            from repro.models import lm
+
+            for n_blk in self._width_ladder(max_w):
+                cache_len = n_blk * bs
+                cache_a = jax.eval_shape(
+                    lambda L=cache_len: lm.init_cache(self.cfg, 1, L)
+                )
+                seg_out = None
+                for w in self._width_ladder(cache_len):
+                    tok_a = jax.ShapeDtypeStruct((1, w), i32)
+                    exe = run("prefill", self._seg_jit,
+                              (pa, cache_a, tok_a, scalar),
+                              donate=(1,), seg_w=w, cache_len=cache_len)
+                    self._aot_exec[("seg", w, cache_len)] = self._wrap(exe)
+                    if seg_out is None:
+                        seg_out = jax.eval_shape(
+                            self._seg_jit, pa, cache_a, tok_a, scalar
+                        )
+                phys_a = jax.ShapeDtypeStruct((n_blk,), i32)
+                exe = run("prefill", self._seg_finish,
+                          (self._avatar(seg_out[0]),
+                           self._avatar(seg_out[1]),
+                           pool_a, scalar, phys_a),
+                          donate=(2,), fin_blk=n_blk)
+                self._aot_exec[("seg_fin", n_blk)] = exe
+
+        out["total"] = sum(
+            v["count"] for k, v in out.items() if isinstance(v, dict)
+        )
+        if self.compile_cache is not None:
+            out["cache"] = self.compile_cache.stats.as_dict()
+        if self.registry is not None:
+            for p in ("decode", "prefill", "chunk", "verify"):
+                self.registry.gauge(
+                    self._m(f"precompile_ms.{p}")).set(out[p]["ms"])
+        return out
 
     # -------------------------------------------------------------- drain
     def drain(

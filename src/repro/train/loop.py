@@ -78,6 +78,23 @@ class _GuardRollback(RuntimeError):
     """An in-band guard tripped with guard_action=rollback."""
 
 
+def _aot_train_step(jit_fn, avatars, *, cache, key_parts, registry):
+    """AOT-compile the train step (``jit(...).lower().compile()``) through
+    the persistent compile cache: a restarted process deserializes the prior
+    run's executable instead of paying XLA at its first step.  Returns the
+    compiled executable (a drop-in callable for the jitted step)."""
+    from repro.core.compile_cache import aot_compile
+
+    t0 = time.perf_counter()
+    exe, hit = aot_compile(jit_fn, avatars, cache=cache, key_parts=key_parts)
+    ms = (time.perf_counter() - t0) * 1e3
+    log.info("train step AOT %s in %.0f ms",
+             "cache hit" if hit else "compiled", ms)
+    if registry is not None:
+        registry.gauge("train.precompile_ms").set(ms)
+    return exe
+
+
 def _step_flops(jit_step, state, batch) -> float:
     """Model flops of one jitted step via XLA's cost analysis (the MFU
     numerator).  ``Lowered.cost_analysis`` needs no compile; fall back to
@@ -173,6 +190,7 @@ def train(
     registry=None,
     obs=None,
     controller=None,
+    compile_cache=None,
 ) -> tuple[Any, list[dict]]:
     # tracing defaults ON, matching MegaServe — the repo-wide documented
     # default (observability is always-on; pass a disabled Tracer to opt out)
@@ -215,9 +233,46 @@ def train(
             ((0, 1) if compressor is not None else (0,)) if may_donate else ()
         )
         jit_fn = jax.jit(raw, donate_argnums=donate)
-        fn = jit_fn
+        inner = jit_fn
+        if compile_cache is not None:
+            # AOT warmup through the persistent cache — restricted to runs
+            # whose sharding is trivial (no mesh, or a single-device mesh):
+            # avatars carry no shardings, so a multi-device step compiled
+            # from them would expect replicated inputs and reject the live
+            # sharded state
+            from repro.core.compile_cache import mesh_descriptor
+            from repro.parallel.sharding import current_mesh_and_rules
+
+            mesh = current_mesh_and_rules()[0]
+            if (mesh is None or getattr(mesh, "empty", False)
+                    or getattr(mesh, "size", 0) == 1):
+                av = lambda t: jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t
+                )
+                avatars = [av(state)]
+                if compressor is not None:
+                    avatars.append(av(jax.eval_shape(
+                        compressor.init, state.master
+                    )))
+                avatars.append(av(ds.batch_at(0)))
+                inner = _aot_train_step(
+                    jit_fn, tuple(avatars),
+                    cache=compile_cache, registry=registry,
+                    key_parts={
+                        "model": cfg, "opt": ocfg, "data": data_cfg,
+                        "grad_accum": loop.grad_accum, "plan": plan_,
+                        "compress": compressor is not None,
+                        "donate": list(donate),
+                        "mesh": mesh_descriptor(mesh),
+                        "state": [
+                            f"{l.shape}/{l.dtype}"
+                            for l in jax.tree.leaves(av(state))
+                        ],
+                    },
+                )
+        fn = inner
         if hooks is not None and hooks.wrap_step is not None:
-            fn = hooks.wrap_step(fn)
+            fn = hooks.wrap_step(inner)
         return fn, jit_fn, pp
 
     step_fn, jit_step, pp_info = build(plan)

@@ -474,8 +474,14 @@ def test_precompile_walks_width_ladder_and_stays_exact(qwen_router):
     ref, _ = _drain_single(cfg, params, scfg, _requests(11, 5, vocab=cfg.vocab_size))
 
     srv = MegaServe(cfg, params, scfg)
-    # paged path: one variant per pow2 table-width bucket up to the cap
-    assert srv.precompile() == 4
+    # paged path: one decode variant per pow2 table-width bucket up to the
+    # cap, plus the prefill prompt-bucket ladder; counts/ms tally per path
+    rep = srv.precompile()
+    assert rep["decode"]["count"] == 4
+    assert rep["prefill"]["count"] == 4
+    assert rep["verify"]["count"] == rep["chunk"]["count"] == 0
+    assert rep["total"] == 8
+    assert rep["decode"]["ms"] > 0 and rep["prefill"]["ms"] > 0
     for p, mn, a in _requests(11, 5, vocab=cfg.vocab_size):
         srv.submit(p, mn, arrival=a)
     assert srv.drain() == ref
